@@ -1,0 +1,46 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.json.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+ARCH_ORDER = (
+    "mixtral-8x7b", "jamba-1.5-large-398b", "xlstm-1.3b", "stablelm-3b",
+    "granite-8b", "paligemma-3b", "qwen3-0.6b", "minicpm3-4b",
+    "musicgen-medium", "deepseek-moe-16b",
+)
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def render(path: str, mesh: str = "16x16") -> str:
+    with open(path) as f:
+        rows = json.load(f)
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+    out = [
+        "| arch | shape | mem/dev (GB) | compute (ms) | memory (ms) | "
+        "collective (ms) | dominant | useful-FLOP frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = by_key.get((a, s, mesh))
+            if r is None:
+                out.append(f"| {a} | {s} | — | — | — | — | (pending) | — |")
+                continue
+            fit = "" if r["per_device_gb"] <= 16 else " ⚠"
+            out.append(
+                f"| {a} | {s} | {r['per_device_gb']:.2f}{fit} | "
+                f"{r['compute_ms']:.1f} | {r['memory_ms']:.1f} | "
+                f"{r['collective_ms']:.1f} | {r['dominant']} | "
+                f"{r['useful_flops_frac']:.2f} |"
+            )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "16x16"
+    print(render(path, mesh))

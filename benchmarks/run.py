@@ -1,0 +1,114 @@
+"""Benchmark harness — one entry per paper table + framework micro-benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the quantity the
+paper's table reports: accuracy / minutes / kJ or bandwidth).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_paper_tables(fast: bool) -> list[str]:
+    from benchmarks.paper_tables import table2a, table2b, table3
+
+    rounds = 2 if fast else 3
+    rows = []
+    t0 = time.perf_counter()
+    for label, acc, mins, kj in table2a(rounds=rounds, epochs_grid=(1, 3)):
+        sys.stdout.flush()
+        rows.append(f"table2a[{label}],{(time.perf_counter()-t0)*1e6:.0f},acc={acc:.3f};mins={mins:.2f};kJ={kj:.2f}")
+    for label, acc, mins, kj in table2b(rounds=rounds, clients_grid=(4, 7) if fast else (4, 7, 10)):
+        rows.append(f"table2b[{label}],{(time.perf_counter()-t0)*1e6:.0f},acc={acc:.3f};mins={mins:.2f};kJ={kj:.2f}")
+    for label, acc, mins, kj in table3(rounds=rounds):
+        rows.append(f"table3[{label}],{(time.perf_counter()-t0)*1e6:.0f},acc={acc:.3f};mins={mins:.2f};kJ={kj:.2f}")
+    return rows
+
+
+def bench_aggregation_kernel() -> list[str]:
+    """fedavg_reduce kernel (interpret) vs jnp oracle vs tree-level mean."""
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(0)
+    c, n = 8, 1 << 20
+    u = jnp.asarray(rng.normal(size=(c, n)), jnp.float32)
+    w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+    us_ref = _timeit(jax.jit(ref.fedavg_reduce), u, w)
+    gbps = (c * n * 4) / (us_ref / 1e6) / 1e9
+    return [
+        f"fedavg_reduce_oracle_{c}x{n},{us_ref:.0f},GBps={gbps:.1f}",
+    ]
+
+
+def bench_round_step() -> list[str]:
+    """Jitted FL round step throughput (reduced LM, parallel mode)."""
+    from repro.configs.base import get_config
+    from repro.core import FedAvg, RoundSpec, make_round_step
+    from repro.data.loader import lm_round_batch
+    from repro.models import build_model
+    from repro.optim import sgd
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    C, steps, B, S = 2, 1, 2, 64
+    rs = jax.jit(make_round_step(
+        m.loss_fn, sgd(0.05), FedAvg(), RoundSpec(max_steps=steps, execution_mode="parallel")
+    ))
+    batch = lm_round_batch(n_clients=C, steps=steps, batch_size=B, seq_len=S,
+                           vocab_size=cfg.vocab_size, seed=0)
+    w = jnp.ones(C); bud = jnp.full((C,), steps, jnp.int32)
+
+    def run(p):
+        new, _, met = rs(p, (), batch, w, bud, 0)
+        return met["client_loss_mean"]
+
+    us = _timeit(run, params, n=3)
+    toks = C * steps * B * S
+    return [f"fl_round_step_reduced,{us:.0f},tokens_per_s={toks/(us/1e6):.0f}"]
+
+
+def bench_compression() -> list[str]:
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1 << 20,)), jnp.float32)
+    q8 = jax.jit(lambda x: ref.quantize_int8(x))
+    us = _timeit(q8, x)
+    return [f"quantize_int8_1M,{us:.0f},GBps={(x.size*4)/(us/1e6)/1e9:.1f}"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for row in bench_round_step():
+        print(row)
+    for row in bench_aggregation_kernel():
+        print(row)
+    for row in bench_compression():
+        print(row)
+    for row in bench_paper_tables(args.fast):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver: federated training of a transformer LM with the jitted
+pod-scale round step (parallel client mode) on a learnable synthetic stream.
+
+Default runs a reduced model for a quick demo; ``--steps-total 300 --d-model
+512 --layers 8`` approaches the ~100M-param regime (slow on 1 CPU core).
+
+  PYTHONPATH=src python examples/federated_llm_finetune.py --rounds 8
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import FedAvg, RoundSpec, make_round_step
+from repro.data.loader import lm_round_batch
+from repro.models import build_model
+from repro.optim import sgd
+from repro.utils.pytree import tree_size
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-0.6b")
+ap.add_argument("--rounds", type=int, default=8)
+ap.add_argument("--clients", type=int, default=4)
+ap.add_argument("--local-steps", type=int, default=4)
+ap.add_argument("--batch", type=int, default=2)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--d-model", type=int, default=128)
+ap.add_argument("--layers", type=int, default=2)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced(n_layers=args.layers, d_model=args.d_model)
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+print(f"arch={cfg.name} params={tree_size(params)/1e6:.1f}M")
+
+strategy = FedAvg()
+round_step = jax.jit(make_round_step(
+    model.loss_fn, sgd(0.1), strategy,
+    RoundSpec(max_steps=args.local_steps, execution_mode="parallel"),
+))
+
+weights = jnp.ones((args.clients,))
+budgets = jnp.full((args.clients,), args.local_steps, jnp.int32)
+state = strategy.init_state(params)
+for rnd in range(1, args.rounds + 1):
+    batch = lm_round_batch(
+        n_clients=args.clients, steps=args.local_steps, batch_size=args.batch,
+        seq_len=args.seq, vocab_size=cfg.vocab_size, seed=rnd,
+    )
+    params, state, metrics = round_step(params, state, batch, weights, budgets, rnd)
+    print(f"round {rnd:2d}  mean client CE loss: {float(metrics['client_loss_mean']):.4f}")

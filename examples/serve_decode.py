@@ -1,0 +1,13 @@
+"""Batched serving demo: prefill a prompt batch then decode tokens, on any
+assigned architecture (reduced size on CPU; ring-cache SWA, MLA latent cache
+and recurrent-state decode all exercised by --arch choice).
+
+  PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
+  PYTHONPATH=src python examples/serve_decode.py --arch xlstm-1.3b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Checkpointing: pytree <-> .npz round-trip + FL server state.
+
+No orbax offline; we serialize with numpy's npz using flattened key paths,
+restoring dtypes/shapes exactly.  Good enough for CPU-scale tests and for the
+protocol's "serialized parameters" wire-format tests.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_META = "__repro_meta__"
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    arr = jax.device_get(leaf)
+    if hasattr(arr, "dtype") and arr.dtype.name == "bfloat16":
+        return np.asarray(arr.view(np.uint16))  # npz-safe carrier
+    return np.asarray(arr)
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): _to_numpy(leaf) for path, leaf in flat}
+
+
+def save_pytree(path: str, tree: PyTree, *, extra_meta: dict | None = None) -> None:
+    flat = _flatten(tree)
+    meta = {"keys": list(flat.keys()), "extra": extra_meta or {}}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **{_META: np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)}, **flat)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    with np.load(path) as zf:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for kpath, leaf in flat:
+            key = jax.tree_util.keystr(kpath)
+            if key not in zf:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = zf[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != expected {leaf.shape}"
+                )
+            if jnp.dtype(leaf.dtype).name == "bfloat16":
+                leaves.append(jnp.asarray(arr.view(np.uint16)).view(jnp.bfloat16))
+            else:
+                leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves
+        )
+
+
+def load_meta(path: str) -> dict:
+    with np.load(path) as zf:
+        raw = bytes(zf[_META].tobytes())
+    return json.loads(raw.decode())

@@ -1,0 +1,13 @@
+"""FL engine — the paper's contribution as a composable JAX module."""
+from .protocol import (
+    FitIns, FitRes, EvaluateIns, EvaluateRes, Parameters,
+    pytree_to_parameters, parameters_to_pytree,
+)
+from .client import Client, JaxClient
+from .server import Server, History, RoundRecord, make_cost_model_for
+from .cost_model import CostModel, DeviceProfile, PROFILES, AWS_DEVICE_FARM
+from .rounds import RoundSpec, make_round_step, make_client_update
+from .strategy import (
+    Strategy, FedAvg, FedProx, FedTau, FedOpt, FedAdam, FedYogi, FedAvgM,
+    STRATEGIES, tau_from_reference_processor,
+)

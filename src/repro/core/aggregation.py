@@ -1,0 +1,51 @@
+"""Server aggregation primitives.
+
+``aggregate_flat`` routes the weighted cross-client reduction through the
+``fedavg_reduce`` Pallas kernel (flat fp32 vector path) — the server-side
+compute hotspot when C x |params| is large.  ``hierarchical_mean`` is the
+explicit two-stage multi-pod reduction (reduce within pod, then across pods)
+used by the shard_map aggregation path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+from repro.utils.pytree import (
+    tree_flatten_to_vector,
+    tree_unflatten_from_vector,
+)
+
+PyTree = Any
+
+
+def aggregate_flat(client_params: PyTree, weights: jnp.ndarray, like: PyTree) -> PyTree:
+    """Weighted mean across client axis via the flat fedavg_reduce kernel.
+
+    client_params leaves: (C, ...).  Equivalent to strategy.weighted_mean but
+    exercises the kernel path (benchmarks/kernel_bench.py compares them).
+    """
+    c = weights.shape[0]
+    flat = jax.vmap(tree_flatten_to_vector)(client_params)     # (C, N)
+    wf = weights.astype(jnp.float32) / jnp.sum(weights.astype(jnp.float32))
+    avg = ops.fedavg_reduce(flat, wf)
+    return tree_unflatten_from_vector(avg, like)
+
+
+def hierarchical_mean(x: jnp.ndarray, weights: jnp.ndarray, *, pod_axis: str, data_axis: str):
+    """Two-stage weighted mean for shard_map bodies: within-pod psum first
+    (cheap intra-pod ICI), then the small cross-pod reduction (expensive
+    inter-pod links carry one pre-reduced tensor instead of C).
+
+    x: per-client leaf slice on this device; weights: this client's weight.
+    """
+    wx = x.astype(jnp.float32) * weights
+    local = jax.lax.psum(wx, axis_name=data_axis)
+    local_w = jax.lax.psum(weights, axis_name=data_axis)
+    total = jax.lax.psum(local, axis_name=pod_axis)
+    total_w = jax.lax.psum(local_w, axis_name=pod_axis)
+    return (total / total_w).astype(x.dtype)

@@ -1,0 +1,142 @@
+"""FL clients — the paper's §4 on-device trainers, as JAX processes.
+
+``Client`` mirrors the Flower client surface the paper describes (§4.1):
+``get_weights`` / ``fit`` / ``evaluate``.  ``JaxClient`` owns a local dataset
+shard + device profile and runs jitted local SGD; it honors the two config
+knobs the paper's server controls: ``epochs`` and the cutoff step budget
+``max_steps`` (tau).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import ClientDataset
+from repro.optim import Optimizer, sgd
+from repro.utils.pytree import tree_sq_norm, tree_sub, tree_where
+
+from .protocol import EvaluateIns, EvaluateRes, FitIns, FitRes
+
+PyTree = Any
+
+# jitted local-training fns shared across clients (same loss/steps/config ->
+# same program; per-instance caches would recompile for every client)
+_GLOBAL_FIT_CACHE: dict = {}
+
+
+class Client:
+    """Protocol-level client interface (paper §4.1)."""
+
+    def get_weights(self, config: dict) -> PyTree:
+        raise NotImplementedError
+
+    def fit(self, ins: FitIns) -> FitRes:
+        raise NotImplementedError
+
+    def evaluate(self, ins: EvaluateIns) -> EvaluateRes:
+        raise NotImplementedError
+
+
+@dataclass
+class JaxClient(Client):
+    client_id: int
+    loss_fn: Callable                    # (params, batch) -> (loss, metrics)
+    dataset: ClientDataset
+    batch_size: int = 32
+    optimizer: Optimizer | None = None
+    trainable_mask: PyTree | None = None
+    device_profile: str = "generic"
+    _params: PyTree = None
+    _fit_cache: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        if self.optimizer is None:
+            self.optimizer = sgd(0.05)
+
+    def get_weights(self, config: dict) -> PyTree:
+        return self._params
+
+    def steps_per_epoch(self) -> int:
+        return self.dataset.steps_per_epoch(self.batch_size)
+
+    def _build_fit(self, n_steps: int, mu: float, lr: float):
+        opt = sgd(lr) if lr else self.optimizer
+        mask = self.trainable_mask
+
+        def total_loss(params, batch, global_params):
+            loss, metrics = self.loss_fn(params, batch)
+            if mu > 0:
+                loss = loss + 0.5 * mu * tree_sq_norm(tree_sub(params, global_params))
+            return loss, metrics
+
+        @jax.jit
+        def fit_steps(global_params, batches, budget):
+            opt_state = opt.init(global_params)
+
+            def step(carry, batch):
+                params, opt_state, i = carry
+                (loss, _), grads = jax.value_and_grad(total_loss, has_aux=True)(
+                    params, batch, global_params
+                )
+                new_params, new_opt = opt.update(grads, params, opt_state, i)
+                if mask is not None:
+                    new_params = jax.tree.map(
+                        lambda n, o, m: n if m else o, new_params, params, mask
+                    )
+                live = i < budget
+                params = tree_where(live, new_params, params)
+                opt_state = tree_where(live, new_opt, opt_state)
+                return (params, opt_state, i + 1), jnp.where(live, loss, 0.0)
+
+            (params, _, _), losses = jax.lax.scan(
+                step, (global_params, opt_state, jnp.zeros((), jnp.int32)), batches
+            )
+            n_steps_done = jnp.minimum(budget, losses.shape[0])
+            return params, jnp.sum(losses) / jnp.maximum(1, n_steps_done)
+
+        return fit_steps
+
+    def fit(self, ins: FitIns) -> FitRes:
+        cfg = ins.config
+        epochs = int(cfg.get("epochs", 1))
+        spe = self.steps_per_epoch()
+        full_steps = epochs * spe
+        budget = int(cfg.get("max_steps", full_steps))
+        mu = float(cfg.get("mu", 0.0))
+        lr = float(cfg.get("lr", 0.0))
+
+        batches = [self.dataset.next_batch(self.batch_size) for _ in range(full_steps)]
+        stacked = {k: np.stack([b[k] for b in batches]) for k in batches[0]}
+
+        cache_key = (id(self.loss_fn), id(self.trainable_mask), full_steps, mu, lr)
+        if cache_key not in _GLOBAL_FIT_CACHE:
+            _GLOBAL_FIT_CACHE[cache_key] = self._build_fit(full_steps, mu, lr)
+        fit_steps = _GLOBAL_FIT_CACHE[cache_key]
+        params, mean_loss = fit_steps(
+            ins.parameters, stacked, jnp.asarray(budget, jnp.int32)
+        )
+        self._params = params
+        steps_done = min(budget, full_steps)
+        return FitRes(
+            parameters=params,
+            num_examples=len(self.dataset),
+            metrics={
+                "loss": float(mean_loss),
+                "steps_done": steps_done,
+                "device_profile": self.device_profile,
+            },
+        )
+
+    def evaluate(self, ins: EvaluateIns) -> EvaluateRes:
+        n = min(len(self.dataset), 512)
+        batch = {"x": self.dataset.x[:n], "y": self.dataset.y[:n]}
+        loss, metrics = jax.jit(self.loss_fn)(ins.parameters, batch)
+        return EvaluateRes(
+            loss=float(loss),
+            num_examples=n,
+            metrics={k: float(v) for k, v in metrics.items()},
+        )

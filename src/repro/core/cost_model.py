@@ -1,0 +1,155 @@
+"""System-cost model: per-device step time + power -> round time & energy.
+
+The paper's central measurement (§5) is that FL accuracy gains carry *system
+costs* — convergence time and energy — that depend on device hardware.  With
+no physical fleet here, we keep the *mechanism* and calibrate the constants
+to the paper's own tables:
+
+- Table 2a (Jetson TX2 GPU, ResNet-18/CIFAR-10, C=10, 40 rounds):
+    E=1: 17.63 min, 10.21 kJ | E=5: 36.83, 50.54 | E=10: 80.32, 100.95
+- Table 3: CPU training is 1.27x slower than GPU at equal E
+  (102 vs 80.32 min); per-round GPU compute ~1.99 min.
+- Table 2b (Android, head model, E=5, 20 rounds):
+    C=4: 30.7 min/10.4 kJ | C=7: 31.3/19.72 | C=10: 31.8/28.0
+
+Derivations used for calibration (documented in benchmarks/table2a.py):
+per-round GPU time at E=10 is ~1.99 min -> with ~78 steps/epoch that is
+~153 ms/step; energy 100.95 kJ / (10 clients * 40 rounds * 780 steps) ~ 32 J
+of marginal energy per client-step plus idle draw.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """Hardware profile of one FL client class."""
+
+    name: str
+    step_time_s: float          # wall time per local training step (batch fixed)
+    active_power_w: float       # board power while training
+    idle_power_w: float = 2.0   # draw while waiting (stragglers burn this)
+    uplink_mbps: float = 20.0
+    downlink_mbps: float = 50.0
+
+    def steps_in_budget(self, tau_s: float) -> int:
+        """How many local steps fit in a cutoff budget tau (paper Table 3)."""
+        return int(np.floor(tau_s / self.step_time_s))
+
+
+# calibrated against the paper's tables (see module docstring)
+JETSON_TX2_GPU = DeviceProfile("jetson-tx2-gpu", step_time_s=0.153, active_power_w=9.0,
+                               idle_power_w=2.5, uplink_mbps=80, downlink_mbps=120)
+JETSON_TX2_CPU = DeviceProfile("jetson-tx2-cpu", step_time_s=0.194, active_power_w=7.5,
+                               idle_power_w=2.0, uplink_mbps=80, downlink_mbps=120)
+PIXEL_4 = DeviceProfile("pixel-4", step_time_s=0.210, active_power_w=4.5, idle_power_w=0.8,
+                        uplink_mbps=20, downlink_mbps=50)
+PIXEL_3 = DeviceProfile("pixel-3", step_time_s=0.290, active_power_w=4.2, idle_power_w=0.8,
+                        uplink_mbps=18, downlink_mbps=45)
+PIXEL_2 = DeviceProfile("pixel-2", step_time_s=0.370, active_power_w=4.0, idle_power_w=0.7,
+                        uplink_mbps=15, downlink_mbps=40)
+GALAXY_TAB_S6 = DeviceProfile("galaxy-tab-s6", step_time_s=0.240, active_power_w=5.0,
+                              idle_power_w=0.9, uplink_mbps=22, downlink_mbps=55)
+GALAXY_TAB_S4 = DeviceProfile("galaxy-tab-s4", step_time_s=0.330, active_power_w=4.8,
+                              idle_power_w=0.9, uplink_mbps=18, downlink_mbps=48)
+TPU_V5E_CHIP = DeviceProfile("tpu-v5e-chip", step_time_s=0.010, active_power_w=170.0,
+                             idle_power_w=60.0, uplink_mbps=400_000, downlink_mbps=400_000)
+
+PROFILES: dict[str, DeviceProfile] = {
+    p.name: p
+    for p in (
+        JETSON_TX2_GPU, JETSON_TX2_CPU, PIXEL_4, PIXEL_3, PIXEL_2,
+        GALAXY_TAB_S6, GALAXY_TAB_S4, TPU_V5E_CHIP,
+    )
+}
+
+# the paper's AWS Device Farm fleet (Table 1)
+AWS_DEVICE_FARM = ("pixel-4", "pixel-3", "pixel-2", "galaxy-tab-s6", "galaxy-tab-s4")
+
+
+@dataclass
+class ClientCost:
+    """Per-round, per-client accounting record."""
+
+    client_id: int
+    profile: str
+    steps: int
+    t_compute_s: float
+    t_comm_s: float
+    e_compute_j: float
+    e_comm_j: float
+
+    @property
+    def t_total_s(self) -> float:
+        return self.t_compute_s + self.t_comm_s
+
+    @property
+    def e_total_j(self) -> float:
+        return self.e_compute_j + self.e_comm_j
+
+
+@dataclass
+class CostModel:
+    """Simulates the fleet's time/energy for each FL round."""
+
+    profiles: list[DeviceProfile]
+    update_bytes: int                      # per-direction model payload
+    comm_power_w: float = 1.2
+
+    def client_round_cost(
+        self, client_id: int, steps: int, *, payload_bytes: int | None = None
+    ) -> ClientCost:
+        p = self.profiles[client_id % len(self.profiles)]
+        payload = self.update_bytes if payload_bytes is None else payload_bytes
+        t_compute = steps * p.step_time_s
+        t_comm = payload * 8 / (p.uplink_mbps * 1e6) + payload * 8 / (
+            p.downlink_mbps * 1e6
+        )
+        return ClientCost(
+            client_id=client_id,
+            profile=p.name,
+            steps=steps,
+            t_compute_s=t_compute,
+            t_comm_s=t_comm,
+            e_compute_j=t_compute * p.active_power_w,
+            e_comm_j=t_comm * self.comm_power_w,
+        )
+
+    def round_costs(
+        self, steps_per_client: list[int], *, payload_bytes: int | None = None
+    ) -> list[ClientCost]:
+        return [
+            self.client_round_cost(cid, s, payload_bytes=payload_bytes)
+            for cid, s in enumerate(steps_per_client)
+        ]
+
+    def round_wall_time(self, costs: list[ClientCost]) -> float:
+        """Synchronous FedAvg: the round ends when the slowest client reports."""
+        return max(c.t_total_s for c in costs)
+
+    def round_energy(self, costs: list[ClientCost]) -> float:
+        """Active energy + straggler idle burn while waiting for the round."""
+        wall = self.round_wall_time(costs)
+        idle = sum(
+            (wall - c.t_total_s) * self.profiles[c.client_id % len(self.profiles)].idle_power_w
+            for c in costs
+        )
+        return sum(c.e_total_j for c in costs) + idle
+
+    # ---- the paper's tau mechanism (§5, Table 3) ----
+    def tau_for_profile(self, reference: str, *, epochs: int, steps_per_epoch: int) -> float:
+        """Hardware-specific cutoff: the wall time the *reference* processor
+        needs for a full E-epoch round (paper: GPU round time 1.99 min)."""
+        ref = PROFILES[reference]
+        return epochs * steps_per_epoch * ref.step_time_s
+
+    def steps_under_tau(
+        self, client_id: int, tau_s: float, full_steps: int
+    ) -> int:
+        if tau_s <= 0:  # tau = 0 means no cutoff (paper notation)
+            return full_steps
+        p = self.profiles[client_id % len(self.profiles)]
+        return max(1, min(full_steps, p.steps_in_budget(tau_s)))

@@ -1,0 +1,100 @@
+"""The Flower protocol, as in-process message dataclasses.
+
+The paper's server speaks ``fit`` / ``evaluate`` messages carrying serialized
+global parameters plus a strategy-controlled config dict (e.g. the number of
+local epochs, or a cutoff time tau).  We keep the message *shape* —
+FitIns/FitRes/EvaluateIns/EvaluateRes with an opaque config mapping — and the
+parameter serialization round-trip, while transport is in-process
+(DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+import io
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------- parameter wire format ----------------
+@dataclass
+class Parameters:
+    """Serialized pytree: list of raw ndarray buffers + dtype/shape manifest."""
+
+    tensors: list[bytes]
+    manifest: list[tuple[str, tuple[int, ...]]]  # (dtype_str, shape)
+
+    @property
+    def num_bytes(self) -> int:
+        return sum(len(t) for t in self.tensors)
+
+
+def pytree_to_parameters(tree: PyTree) -> Parameters:
+    leaves = jax.tree.leaves(tree)
+    tensors, manifest = [], []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        # bfloat16 has no portable buffer protocol: ship as uint16 view
+        if arr.dtype.name == "bfloat16":
+            raw = arr.view(np.uint16)
+            tensors.append(raw.tobytes())
+            manifest.append(("bfloat16", tuple(arr.shape)))
+        else:
+            tensors.append(arr.tobytes())
+            manifest.append((arr.dtype.name, tuple(arr.shape)))
+    return Parameters(tensors=tensors, manifest=manifest)
+
+
+def parameters_to_pytree(params: Parameters, like: PyTree) -> PyTree:
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == len(params.tensors), "wire/client structure mismatch"
+    out = []
+    for buf, (dtype, shape), leaf in zip(params.tensors, params.manifest, leaves):
+        if dtype == "bfloat16":
+            arr = np.frombuffer(buf, dtype=np.uint16).reshape(shape)
+            out.append(jnp.asarray(arr).view(jnp.bfloat16))
+        else:
+            out.append(jnp.asarray(np.frombuffer(buf, dtype=dtype).reshape(shape)))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------- messages ----------------
+@dataclass
+class FitIns:
+    parameters: Parameters | PyTree
+    config: dict = field(default_factory=dict)   # e.g. {"epochs": 5, "tau_s": 120.0}
+
+
+@dataclass
+class FitRes:
+    parameters: Parameters | PyTree               # updated params (or delta)
+    num_examples: int
+    metrics: dict = field(default_factory=dict)  # incl. steps_done, t_compute_s
+
+
+@dataclass
+class EvaluateIns:
+    parameters: Parameters | PyTree
+    config: dict = field(default_factory=dict)
+
+
+@dataclass
+class EvaluateRes:
+    loss: float
+    num_examples: int
+    metrics: dict = field(default_factory=dict)
+
+
+@dataclass
+class ClientProperties:
+    """What the RPC layer knows about a device (drives tau assignment)."""
+
+    client_id: int
+    device_profile: str = "generic"
+    uplink_mbps: float = 20.0
+    downlink_mbps: float = 50.0

@@ -1,0 +1,272 @@
+"""Jit-able FL round step — the pod-scale realization of the paper's FL loop.
+
+One ``round_step`` = every sampled client runs (up to) ``max_steps`` local
+SGD steps from the current global model, then the Strategy aggregates.  Two
+mesh mappings (DESIGN.md §4):
+
+- **parallel**: params/batches carry a leading client axis C sharded over the
+  mesh's client axes ((pod,) data); local training is vmapped over clients;
+  aggregation is a cross-client weighted reduction (an all-reduce over the
+  client axes at the XLA level).
+- **sequential**: one client at a time occupies the whole mesh (scan over
+  clients); the aggregate is an accumulated weighted delta.  Used for archs
+  whose per-client replica cannot fit (mixtral, jamba).
+
+The paper's tau-cutoff becomes a *per-client step budget* ``step_budgets``
+(int (C,)): clients keep stepping while ``i < budget_c`` and freeze their
+parameters afterwards — shape-static, mask-realized partial work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+from repro.utils.pytree import tree_where
+
+from .strategy.base import Strategy
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class RoundSpec:
+    """Static configuration of the jitted round step."""
+
+    max_steps: int               # scanned local steps (tau masks within)
+    execution_mode: str          # "parallel" | "sequential" | "fsdp"
+    prox_mu: float = 0.0         # FedProx proximal coefficient (0 = off)
+    microbatches: int = 1        # gradient accumulation within one local step
+
+
+def make_client_update(
+    loss_fn: Callable,           # (params, batch) -> (loss, metrics)
+    opt: Optimizer,
+    spec: RoundSpec,
+    trainable_mask: PyTree | None = None,
+):
+    """Returns client_update(global_params, batches, step_budget) ->
+    (new_params, mean_loss, steps_done) for ONE client.
+
+    batches: pytree with leading (max_steps, ...) axis.
+    """
+
+    def total_loss(params, batch, global_params):
+        loss, metrics = loss_fn(params, batch)
+        if spec.prox_mu > 0.0:
+            from repro.utils.pytree import tree_sq_norm, tree_sub
+
+            loss = loss + 0.5 * spec.prox_mu * tree_sq_norm(
+                tree_sub(params, global_params)
+            )
+        return loss, metrics
+
+    def client_update(global_params, batches, step_budget):
+        opt_state = opt.init(global_params)
+
+        def grad_of(params, batch):
+            if spec.microbatches <= 1:
+                (loss, _), grads = jax.value_and_grad(total_loss, has_aux=True)(
+                    params, batch, global_params
+                )
+                return loss, grads
+
+            # gradient accumulation: scan over microbatch slices of the batch
+            # dim (activation memory / microbatches; bf16 accumulators)
+            mb = spec.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mbatch):
+                loss_acc, gacc = carry
+                (loss, _), grads = jax.value_and_grad(total_loss, has_aux=True)(
+                    params, mbatch, global_params
+                )
+                gacc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), gacc, grads)
+                return (loss_acc + loss, gacc), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+            (loss_sum, gacc), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zeros), micro
+            )
+            grads = jax.tree.map(lambda g: (g / mb).astype(jnp.bfloat16), gacc)
+            return loss_sum / mb, grads
+
+        def one_step(carry, xs):
+            params, opt_state, i = carry
+            batch = xs
+            loss, grads = grad_of(params, batch)
+            new_params, new_opt_state = opt.update(grads, params, opt_state, i)
+            if trainable_mask is not None:
+                new_params = jax.tree.map(
+                    lambda n, o, m: n if m else o, new_params, params, trainable_mask
+                )
+            live = i < step_budget
+            params = tree_where(live, new_params, params)
+            opt_state = tree_where(live, new_opt_state, opt_state)
+            loss = jnp.where(live, loss, 0.0)
+            return (params, opt_state, i + 1), loss
+
+        (params, _, _), losses = jax.lax.scan(
+            one_step, (global_params, opt_state, jnp.zeros((), jnp.int32)), batches,
+            length=spec.max_steps,
+        )
+        steps_done = jnp.minimum(step_budget, spec.max_steps)
+        mean_loss = jnp.sum(losses) / jnp.maximum(1, steps_done)
+        return params, mean_loss, steps_done
+
+    return client_update
+
+
+def make_round_step(
+    loss_fn: Callable,
+    opt: Optimizer,
+    strategy: Strategy,
+    spec: RoundSpec,
+    trainable_mask: PyTree | None = None,
+    mesh=None,
+    client_axes: tuple[str, ...] = ("data",),
+    param_shardings: PyTree | None = None,
+):
+    """Builds round_step(global_params, server_state, batches, weights,
+    step_budgets, rnd) -> (new_global, new_server_state, metrics).
+
+    parallel:   batches leaves (C, max_steps, B, ...); weights/budgets (C,).
+                With a mesh, clients map 1:1 onto `client_axes` via shard_map
+                (manual over client axes, auto over the model axes) so local
+                training is provably communication-free across clients and
+                aggregation is an explicit — hierarchical when multi-pod —
+                cross-client psum.  Without a mesh (CPU tests) it vmaps.
+    sequential: identical signature; clients are scanned, not mapped.
+    """
+    client_update = make_client_update(loss_fn, opt, spec, trainable_mask)
+
+    if spec.execution_mode == "parallel" and mesh is not None:
+        from jax.sharding import PartitionSpec as P
+
+        axes = client_axes
+
+        def per_client(global_params, batches, weight, budget):
+            b0 = jax.tree.map(lambda x: x[0], batches)
+            new_p, loss, steps = client_update(global_params, b0, budget[0])
+
+            wf = weight[0].astype(jnp.float32)
+
+            def wmean(n, g):
+                wx = n.astype(jnp.float32) * wf
+                # hierarchical aggregation: reduce inside the pod first, then
+                # across pods (one pre-reduced tensor crosses the slow links)
+                for ax in reversed(axes):
+                    wx = jax.lax.psum(wx, ax)
+                return wx
+
+            wsum = wf
+            for ax in reversed(axes):
+                wsum = jax.lax.psum(wsum, ax)
+            avg = jax.tree.map(
+                lambda n, g: (wmean(n, g) / wsum).astype(g.dtype),
+                new_p, global_params,
+            )
+            return avg, loss[None], steps[None]
+
+        def round_step(global_params, server_state, batches, weights, step_budgets, rnd):
+            batch_specs = jax.tree.map(lambda x: P(axes), batches)
+            param_specs_manual = jax.tree.map(lambda x: P(), global_params)
+            avg, losses, steps = jax.shard_map(
+                per_client,
+                mesh=mesh,
+                in_specs=(param_specs_manual, batch_specs, P(axes), P(axes)),
+                out_specs=(param_specs_manual, P(axes), P(axes)),
+                axis_names=set(axes),
+                check_vma=False,
+            )(global_params, batches, weights, step_budgets)
+            new_global, new_state = strategy.server_update(
+                avg, global_params, server_state, rnd
+            )
+            metrics = {
+                "client_loss_mean": jnp.mean(losses),
+                "client_loss_max": jnp.max(losses),
+                "steps_total": jnp.sum(steps),
+            }
+            return new_global, new_state, metrics
+
+        return round_step
+
+    if spec.execution_mode == "parallel":
+
+        def round_step(global_params, server_state, batches, weights, step_budgets, rnd):
+            new_params, losses, steps = jax.vmap(
+                client_update, in_axes=(None, 0, 0)
+            )(global_params, batches, step_budgets)
+            new_global, new_state = strategy.aggregate(
+                new_params, weights, global_params, server_state, rnd
+            )
+            metrics = {
+                "client_loss_mean": jnp.mean(losses),
+                "client_loss_max": jnp.max(losses),
+                "steps_total": jnp.sum(steps),
+            }
+            return new_global, new_state, metrics
+
+        return round_step
+
+    def _pin(tree):
+        """Pin the fp32 delta accumulator to the parameter sharding —
+        without this the scan carry (initialized from plain zeros) can end
+        up replicated, which for a multi-B model is fatal."""
+        if param_shardings is None:
+            return tree
+        return jax.lax.with_sharding_constraint(tree, param_shardings)
+
+    def round_step(global_params, server_state, batches, weights, step_budgets, rnd):
+        wf = weights.astype(jnp.float32)
+        wsum = jnp.sum(wf)
+
+        def per_client(carry, xs):
+            delta_acc, loss_acc, steps_acc = carry
+            client_batches, w, budget = xs
+            new_params, loss, steps = client_update(
+                global_params, client_batches, budget
+            )
+            scale = (w / wsum).astype(jnp.bfloat16)
+            delta_acc = _pin(jax.tree.map(
+                lambda acc, n, g: acc + scale * (n - g).astype(jnp.bfloat16),
+                delta_acc, new_params, global_params,
+            ))
+            return (delta_acc, loss_acc + loss * w / wsum, steps_acc + steps), None
+
+        # bf16 delta accumulator: halves the largest param-state buffer; the
+        # single-round accumulation error is far below local-SGD noise
+        zero_delta = _pin(jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.bfloat16), global_params
+        ))
+        (delta, loss_mean, steps_total), _ = jax.lax.scan(
+            per_client,
+            (zero_delta, jnp.zeros(()), jnp.zeros((), jnp.int32)),
+            (batches, wf, step_budgets),
+        )
+        # the averaged delta goes straight through server_update (FedAvg:
+        # identity; FedOpt: server optimizer) — no stacked fp32 detour.
+        avg_params = _pin(jax.tree.map(
+            lambda g, d: (g.astype(jnp.float32) + d.astype(jnp.float32)).astype(g.dtype),
+            global_params, delta,
+        ))
+        new_global, new_state = strategy.server_update(
+            avg_params, global_params, server_state, rnd
+        )
+        metrics = {
+            "client_loss_mean": loss_mean,
+            "client_loss_max": loss_mean,
+            "steps_total": steps_total,
+        }
+        return new_global, new_state, metrics
+
+    return round_step

@@ -1,0 +1,146 @@
+"""The FL loop — Flower's server architecture (paper §3, Figure 1).
+
+``Server`` orchestrates rounds and delegates all decisions to the Strategy;
+the CostModel plays the role of the physical fleet, charging wall-time and
+energy for every client's compute and communication.  History captures the
+paper's evaluation axes: accuracy / convergence time / energy per round.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.utils.logging import MetricsLogger
+from repro.utils.pytree import tree_bytes
+
+from .client import Client
+from .cost_model import CostModel
+from .protocol import EvaluateIns, FitIns
+from .strategy.base import Strategy
+
+PyTree = Any
+
+
+@dataclass
+class RoundRecord:
+    rnd: int
+    train_loss: float
+    eval_loss: float | None
+    eval_acc: float | None
+    wall_time_s: float       # simulated fleet wall-clock for the round
+    energy_j: float          # simulated fleet energy
+    comm_bytes: int
+    steps: int
+
+
+@dataclass
+class History:
+    rounds: list[RoundRecord] = field(default_factory=list)
+
+    def add(self, rec: RoundRecord) -> None:
+        self.rounds.append(rec)
+
+    @property
+    def total_time_s(self) -> float:
+        return sum(r.wall_time_s for r in self.rounds)
+
+    @property
+    def total_energy_j(self) -> float:
+        return sum(r.energy_j for r in self.rounds)
+
+    def final_accuracy(self) -> float | None:
+        for r in reversed(self.rounds):
+            if r.eval_acc is not None:
+                return r.eval_acc
+        return None
+
+    def accuracy_series(self) -> list[tuple[int, float]]:
+        return [(r.rnd, r.eval_acc) for r in self.rounds if r.eval_acc is not None]
+
+    def time_to_accuracy(self, target: float) -> float | None:
+        """Simulated convergence time (paper: 'Convergence Time (mins)')."""
+        t = 0.0
+        for r in self.rounds:
+            t += r.wall_time_s
+            if r.eval_acc is not None and r.eval_acc >= target:
+                return t
+        return None
+
+
+@dataclass
+class Server:
+    strategy: Strategy
+    clients: list[Client]
+    cost_model: CostModel | None = None
+    eval_fn: Callable | None = None      # (params) -> dict (centralized eval)
+    eval_every: int = 1
+    logger: MetricsLogger = field(default_factory=lambda: MetricsLogger("server"))
+
+    def run(self, global_params: PyTree, num_rounds: int) -> tuple[PyTree, History]:
+        history = History()
+        client_ids = list(range(len(self.clients)))
+
+        for rnd in range(1, num_rounds + 1):
+            fit_ins = self.strategy.configure_fit(rnd, global_params, client_ids)
+
+            results, steps_per_client = [], []
+            for cid, ins in fit_ins:
+                res = self.clients[cid].fit(ins)
+                results.append((cid, res))
+                steps_per_client.append(int(res.metrics.get("steps_done", 1)))
+
+            global_params = self.strategy.aggregate_fit(rnd, results, global_params)
+
+            # ---- system-cost accounting (the paper's §5 measurement) ----
+            wall, energy, comm = 0.0, 0.0, 0
+            if self.cost_model is not None:
+                costs = self.cost_model.round_costs(steps_per_client)
+                wall = self.cost_model.round_wall_time(costs)
+                energy = self.cost_model.round_energy(costs)
+                comm = 2 * self.cost_model.update_bytes * len(results)
+
+            train_loss = float(
+                np.average(
+                    [r.metrics.get("loss", 0.0) for _, r in results],
+                    weights=[r.num_examples for _, r in results],
+                )
+            )
+
+            eval_loss = eval_acc = None
+            if rnd % self.eval_every == 0:
+                eval_loss, eval_acc = self._evaluate(global_params)
+
+            rec = RoundRecord(
+                rnd=rnd, train_loss=train_loss, eval_loss=eval_loss,
+                eval_acc=eval_acc, wall_time_s=wall, energy_j=energy,
+                comm_bytes=comm, steps=sum(steps_per_client),
+            )
+            history.add(rec)
+            self.logger.log(
+                "round", rnd=rnd, loss=train_loss,
+                acc=-1.0 if eval_acc is None else eval_acc,
+                wall_s=wall, energy_kj=energy / 1e3,
+            )
+        return global_params, history
+
+    def _evaluate(self, global_params) -> tuple[float | None, float | None]:
+        if self.eval_fn is not None:
+            m = self.eval_fn(global_params)
+            return m.get("loss"), m.get("acc")
+        # federated evaluation: average client-side evaluate()
+        losses, accs, ns = [], [], []
+        for c in self.clients:
+            res = c.evaluate(EvaluateIns(parameters=global_params))
+            losses.append(res.loss)
+            accs.append(res.metrics.get("acc", np.nan))
+            ns.append(res.num_examples)
+        w = np.asarray(ns, np.float64)
+        return float(np.average(losses, weights=w)), float(np.average(accs, weights=w))
+
+
+def make_cost_model_for(params: PyTree, profiles: list, **kw) -> CostModel:
+    return CostModel(profiles=profiles, update_bytes=tree_bytes(params), **kw)

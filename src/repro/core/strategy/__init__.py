@@ -1,0 +1,20 @@
+from .base import Strategy, weighted_mean, pseudo_gradient
+from .fedavg import FedAvg
+from .fedprox import FedProx
+from .fedtau import FedTau, tau_from_reference_processor
+from .fedopt import FedOpt, FedAdam, FedYogi, FedAvgM
+
+STRATEGIES = {
+    "fedavg": FedAvg,
+    "fedprox": FedProx,
+    "fedtau": FedTau,
+    "fedadam": FedAdam,
+    "fedyogi": FedYogi,
+    "fedavgm": FedAvgM,
+}
+
+__all__ = [
+    "Strategy", "weighted_mean", "pseudo_gradient",
+    "FedAvg", "FedProx", "FedTau", "tau_from_reference_processor",
+    "FedOpt", "FedAdam", "FedYogi", "FedAvgM", "STRATEGIES",
+]

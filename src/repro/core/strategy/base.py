@@ -1,0 +1,120 @@
+"""Strategy interface — the paper's pluggable server-side decision maker.
+
+The FL loop (server.py) orchestrates rounds but delegates every decision to
+the Strategy, exactly as in Flower's architecture (paper §3, Figure 1):
+which clients train, with what config (epochs / tau), and how results merge
+into the global model.
+
+Two integration surfaces:
+- python-side hooks (configure_fit / aggregate_fit) used by the Server with
+  Client objects (the paper-scale path);
+- a jit-able ``aggregate`` + ``server_update`` pair used inside the pjit
+  round step (the pod-scale path, core/rounds.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_scale, tree_sub
+
+from ..protocol import FitIns, FitRes
+
+PyTree = Any
+
+
+@dataclass
+class Strategy:
+    name: str = "base"
+    fraction_fit: float = 1.0
+    min_fit_clients: int = 1
+
+    # ---------------- python-side orchestration ----------------
+    def num_fit_clients(self, available: int) -> int:
+        return max(self.min_fit_clients, int(available * self.fraction_fit))
+
+    def sample_clients(self, rnd: int, client_ids: Sequence[int]) -> list[int]:
+        import numpy as np
+
+        n = self.num_fit_clients(len(client_ids))
+        rng = np.random.default_rng(10_000 + rnd)
+        return sorted(rng.choice(client_ids, size=n, replace=False).tolist())
+
+    def fit_config(self, rnd: int, client_id: int) -> dict:
+        """Per-round, per-client config shipped in FitIns (epochs, tau, lr...)."""
+        return {}
+
+    def configure_fit(
+        self, rnd: int, global_params: PyTree, client_ids: Sequence[int]
+    ) -> list[tuple[int, FitIns]]:
+        chosen = self.sample_clients(rnd, client_ids)
+        return [
+            (cid, FitIns(parameters=global_params, config=self.fit_config(rnd, cid)))
+            for cid in chosen
+        ]
+
+    def aggregate_fit(
+        self, rnd: int, results: list[tuple[int, FitRes]], global_params: PyTree
+    ) -> PyTree:
+        """Default: examples-weighted average of returned parameters."""
+        weights = jnp.asarray(
+            [float(r.num_examples) for _, r in results], jnp.float32
+        )
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+            *[r.parameters for _, r in results],
+        )
+        new_global, _ = self.aggregate(
+            stacked, weights, global_params, self.init_state(global_params), rnd
+        )
+        return new_global
+
+    # ---------------- jit-able core ----------------
+    def init_state(self, global_params: PyTree) -> PyTree:
+        return ()
+
+    def aggregate(
+        self,
+        client_params: PyTree,   # leaves (C, ...): per-client updated params
+        weights: jnp.ndarray,    # (C,) aggregation weights (num examples)
+        global_params: PyTree,
+        server_state: PyTree,
+        rnd,
+    ) -> tuple[PyTree, PyTree]:
+        raise NotImplementedError
+
+    def server_update(
+        self, avg_params: PyTree, global_params: PyTree, server_state: PyTree, rnd
+    ) -> tuple[PyTree, PyTree]:
+        """Consume the already-reduced client average (shard_map path).
+
+        FedAvg-family: the average IS the new global.  FedOpt overrides to
+        apply a server optimizer to the pseudo-gradient.
+        """
+        return avg_params, server_state
+
+    # client-side loss shaping hook (FedProx adds the proximal term)
+    def client_loss_extra(self, params: PyTree, global_params: PyTree):
+        return jnp.zeros((), jnp.float32)
+
+
+def weighted_mean(client_params: PyTree, weights: jnp.ndarray) -> PyTree:
+    """Examples-weighted mean across the leading client axis (fp32 accumulate)."""
+    wf = weights.astype(jnp.float32)
+    wsum = jnp.sum(wf)
+
+    def leaf_mean(x):
+        wshape = (x.shape[0],) + (1,) * (x.ndim - 1)
+        acc = jnp.sum(x.astype(jnp.float32) * wf.reshape(wshape), axis=0)
+        return (acc / wsum).astype(x.dtype)
+
+    return jax.tree.map(leaf_mean, client_params)
+
+
+def pseudo_gradient(client_params: PyTree, weights, global_params: PyTree) -> PyTree:
+    """FedOpt's server 'gradient': g = global - weighted_mean(clients)."""
+    avg = weighted_mean(client_params, weights)
+    return tree_sub(global_params, avg)

@@ -1,0 +1,66 @@
+"""FedOpt family (Reddi et al., 2021): server-side adaptive optimizers.
+
+Beyond-paper strategies: the aggregated client average becomes a pseudo-
+gradient consumed by a server optimizer (momentum / Adam / Yogi).  Included
+because the paper's stated goal — "this quantification could be used to
+design more efficient FL algorithms" — is exactly the trade space these
+occupy (fewer rounds at the same per-round system cost).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, sgd, yogi
+from repro.utils.pytree import tree_cast
+
+from .base import Strategy, pseudo_gradient
+
+
+@dataclass
+class FedOpt(Strategy):
+    name: str = "fedopt"
+    local_epochs: int = 1
+    local_lr: float = 0.05
+    server_opt: str = "adam"       # "sgdm" | "adam" | "yogi"
+    server_lr: float = 0.1
+    server_momentum: float = 0.9
+
+    def _opt(self):
+        if self.server_opt == "sgdm":
+            return sgd(self.server_lr, momentum=self.server_momentum)
+        if self.server_opt == "yogi":
+            return yogi(self.server_lr)
+        return adam(self.server_lr, b1=0.9, b2=0.99)
+
+    def fit_config(self, rnd: int, client_id: int) -> dict:
+        return {"epochs": self.local_epochs, "lr": self.local_lr}
+
+    def init_state(self, global_params):
+        return self._opt().init(global_params)
+
+    def aggregate(self, client_params, weights, global_params, server_state, rnd):
+        g = pseudo_gradient(client_params, weights, global_params)
+        new_params, new_state = self._opt().update(g, global_params, server_state, rnd)
+        return new_params, new_state
+
+    def server_update(self, avg_params, global_params, server_state, rnd):
+        g = jax.tree.map(
+            lambda gp, ap: gp.astype(jnp.float32) - ap.astype(jnp.float32),
+            global_params, avg_params,
+        )
+        return self._opt().update(g, global_params, server_state, rnd)
+
+
+def FedAdam(**kw) -> FedOpt:
+    return FedOpt(name="fedadam", server_opt="adam", **kw)
+
+
+def FedYogi(**kw) -> FedOpt:
+    return FedOpt(name="fedyogi", server_opt="yogi", **kw)
+
+
+def FedAvgM(**kw) -> FedOpt:
+    return FedOpt(name="fedavgm", server_opt="sgdm", **kw)

@@ -1,0 +1,59 @@
+"""FedTau — the paper's modified FedAvg with hardware-specific cutoff time.
+
+Each client gets a wall-clock budget tau (FitIns config); when tau expires it
+ships whatever parameters it has, even mid-epoch (paper §5, Table 3).  The
+distinctive capability the paper highlights is *processor-specific* tau:
+Flower's cost quantification lets the server set tau_CPU = round time of the
+GPU fleet, equalizing round walls at a small accuracy cost.
+
+In simulation the cutoff maps to a per-client step budget via the cost model
+(steps_i = floor(tau / step_time_i)); the jitted round step realizes partial
+work with a per-client step mask (core/rounds.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..cost_model import CostModel
+from .base import Strategy, weighted_mean
+
+
+@dataclass
+class FedTau(Strategy):
+    name: str = "fedtau"
+    local_epochs: int = 5
+    local_lr: float = 0.05
+    tau_s: float = 0.0                    # 0 = no cutoff (paper notation)
+    cost_model: CostModel | None = None
+    steps_per_epoch: int = 10
+    weight_by_steps: bool = False         # weight updates by completed steps
+
+    def fit_config(self, rnd: int, client_id: int) -> dict:
+        cfg = {"epochs": self.local_epochs, "lr": self.local_lr, "tau_s": self.tau_s}
+        if self.cost_model is not None:
+            full = self.local_epochs * self.steps_per_epoch
+            cfg["max_steps"] = self.cost_model.steps_under_tau(
+                client_id, self.tau_s, full
+            )
+        return cfg
+
+    def client_step_budgets(self, client_ids) -> list[int]:
+        full = self.local_epochs * self.steps_per_epoch
+        if self.cost_model is None or self.tau_s <= 0:
+            return [full for _ in client_ids]
+        return [
+            self.cost_model.steps_under_tau(cid, self.tau_s, full)
+            for cid in client_ids
+        ]
+
+    def aggregate(self, client_params, weights, global_params, server_state, rnd):
+        return weighted_mean(client_params, weights), server_state
+
+
+def tau_from_reference_processor(
+    cost_model: CostModel, reference_profile: str, *, epochs: int, steps_per_epoch: int
+) -> float:
+    """Paper Table 3: set tau to the reference (GPU) fleet's full round time."""
+    return cost_model.tau_for_profile(
+        reference_profile, epochs=epochs, steps_per_epoch=steps_per_epoch
+    )

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel has: <name>.py (pl.pallas_call + BlockSpec), an entry in ops.py
+(backend-dispatching jit wrapper) and an oracle in ref.py (pure jnp).  On
+this CPU container kernels are validated with interpret=True.
+"""
+from . import ops, ref

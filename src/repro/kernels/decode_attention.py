@@ -1,0 +1,95 @@
+"""Single-token decode attention (Pallas TPU): one query against a KV cache.
+
+Grid = (B*KV, S/bk) — KV-length minor so the per-(batch, kv-head) online
+softmax state for the G grouped query heads carries in VMEM scratch.
+Validity of cache slots (ring buffers, unfilled tails) comes in as an int32
+mask rather than positions, so the same kernel serves linear and ring caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, n_kv_blocks: int,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale   # (G, D)
+    k = k_ref[0].astype(jnp.float32)           # (bk, D)
+    v = v_ref[0].astype(jnp.float32)
+    valid = valid_ref[0] != 0                  # (bk,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, bk)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k_cache, v_cache, *, kv_valid, bk: int = 128, interpret: bool = False):
+    """q: (B,H,D); caches: (B,S,KV,D); kv_valid: (B,S) bool -> (B,H,D)."""
+    b, h, d = q.shape
+    _, s, kv, _ = k_cache.shape
+    g = h // kv
+    scale = d ** -0.5
+    bk = min(bk, s)
+    n_kv = s // bk
+
+    qr = q.reshape(b * kv, g, d)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    validr = jnp.broadcast_to(
+        kv_valid[:, None, :].astype(jnp.int32), (b, kv, s)
+    ).reshape(b * kv, s)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, n_kv_blocks=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bk_, ik: (bk_, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda bk_, ik: (bk_, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda bk_, ik: (bk_, ik, 0)),
+            pl.BlockSpec((1, bk), lambda bk_, ik: (bk_, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bk_, ik: (bk_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, validr)
+    return out.reshape(b, h, d)

@@ -1,0 +1,44 @@
+"""FedAvg weighted aggregation (Pallas TPU) — the server's compute hotspot.
+
+updates: (C, N) flat client updates, weights: (C,).  Grid = (N/bn,): each
+step loads a (C, bn) tile and contracts against the weight vector on the MXU
+(1xC @ Cxbn), fp32 accumulate — one pass over the C x N payload at HBM
+bandwidth, which is the roofline for this op.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(u_ref, w_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)          # (C, bn)
+    w = w_ref[...].astype(jnp.float32)          # (1, C) normalized weights
+    acc = jax.lax.dot_general(
+        w, u, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (1, bn)
+    o_ref[...] = acc[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def fedavg_reduce(updates, weights, *, bn: int = 8192, interpret: bool = False):
+    """(C,N) x (C,) -> (N,) weighted mean (weights auto-normalized)."""
+    c, n = updates.shape
+    bn = min(bn, n)
+    wn = (weights.astype(jnp.float32) / jnp.sum(weights.astype(jnp.float32)))
+    wn = wn.reshape(1, c)
+
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((c, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), updates.dtype),
+        interpret=interpret,
+    )(updates, wn)

@@ -1,0 +1,107 @@
+"""Public kernel entry points with backend dispatch.
+
+Models call these; on TPU they route to the Pallas kernels, elsewhere to the
+pure-jnp oracles in ref.py (which is also what the CPU dry-run lowers).
+``set_impl`` lets tests force either path, and ``interpret=True`` runs the
+Pallas kernel bodies on CPU for the per-kernel allclose tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+_IMPL = "auto"  # "auto" | "pallas" | "reference"
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("auto", "pallas", "reference")
+    _IMPL = impl
+
+
+def _use_pallas() -> bool:
+    if _IMPL == "pallas":
+        return True
+    if _IMPL == "reference":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+# ---------------- attention ----------------
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0, interpret=False):
+    if _use_pallas() or interpret:
+        from .flash_attention import flash_attention as fa
+
+        b, sq, h, d = q.shape
+        # kernel needs MXU-aligned tiles; fall back for tiny/ragged shapes
+        if sq % 128 == 0 and k.shape[1] % 128 == 0 and d % 8 == 0:
+            return fa(
+                q, k, v, causal=causal, window=window, q_offset=q_offset,
+                interpret=interpret or jax.default_backend() != "tpu",
+            )
+    return ref.attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def decode_attention(q, k_cache, v_cache, *, kv_valid, interpret=False):
+    if _use_pallas() or interpret:
+        from .decode_attention import decode_attention as da
+
+        b, s, kv, d = k_cache.shape
+        if s % 128 == 0 and d % 8 == 0:
+            return da(
+                q, k_cache, v_cache, kv_valid=kv_valid,
+                interpret=interpret or jax.default_backend() != "tpu",
+            )
+    return ref.decode_attention(q, k_cache, v_cache, kv_valid=kv_valid)
+
+
+# ---------------- mamba scan ----------------
+def selective_scan(x, dt, A, B, C, D, *, init_state=None, interpret=False):
+    if _use_pallas() or interpret:
+        from .selective_scan import selective_scan as ss
+
+        if x.shape[1] % 128 == 0:
+            return ss(
+                x, dt, A, B, C, D, init_state=init_state,
+                interpret=interpret or jax.default_backend() != "tpu",
+            )
+    return ref.selective_scan(x, dt, A, B, C, D, init_state=init_state)
+
+
+selective_scan_step = ref.selective_scan_step  # trivially small; no kernel
+
+
+# ---------------- FL aggregation ----------------
+def fedavg_reduce(updates, weights, *, interpret=False):
+    if _use_pallas() or interpret:
+        from .fedavg_reduce import fedavg_reduce as fr
+
+        if updates.shape[-1] % 1024 == 0:
+            return fr(
+                updates, weights,
+                interpret=interpret or jax.default_backend() != "tpu",
+            )
+    return ref.fedavg_reduce(updates, weights)
+
+
+# ---------------- int8 codec ----------------
+def quantize_int8(x, block: int = 256, *, interpret=False):
+    if _use_pallas() or interpret:
+        from .quantize import quantize_int8 as qz
+
+        if x.shape[-1] % max(block, 1024) == 0:
+            return qz(x, block=block, interpret=interpret or jax.default_backend() != "tpu")
+    return ref.quantize_int8(x, block=block)
+
+
+def dequantize_int8(q, scale, block: int = 256, *, interpret=False):
+    if _use_pallas() or interpret:
+        from .quantize import dequantize_int8 as dq
+
+        if q.shape[-1] % max(block, 1024) == 0:
+            return dq(q, scale, block=block, interpret=interpret or jax.default_backend() != "tpu")
+    return ref.dequantize_int8(q, scale, block=block)

@@ -1,0 +1,73 @@
+"""int8 block quantization codec (Pallas TPU) for FL update compression.
+
+Symmetric per-256-block scaling.  Grid = (N/bn,); each step quantizes a bn
+tile (bn % 256 == 0): reshape to (bn/256, 256), rowwise absmax -> scale,
+round/clamp to int8.  Dequantize reverses it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)                  # (bn,)
+    xb = x.reshape(-1, block)
+    scale = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127)
+    q_ref[...] = q.reshape(-1).astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bn", "interpret"))
+def quantize_int8(x, *, block: int = BLOCK, bn: int = 8192, interpret: bool = False):
+    """x: (N,) -> (q int8 (N,), scales fp32 (N/block,)). N % block == 0."""
+    n = x.shape[0]
+    bn = min(bn, n)
+    assert n % block == 0 and bn % block == 0
+    kernel = functools.partial(_quant_kernel, block=block)
+    q, s = pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn // block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int8),
+            jax.ShapeDtypeStruct((n // block,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, block: int):
+    q = q_ref[...].astype(jnp.float32).reshape(-1, block)
+    s = s_ref[...].astype(jnp.float32)
+    x_ref[...] = (q * s[:, None]).reshape(-1).astype(x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bn", "interpret"))
+def dequantize_int8(q, scales, *, block: int = BLOCK, bn: int = 8192, interpret: bool = False):
+    n = q.shape[0]
+    bn = min(bn, n)
+    kernel = functools.partial(_dequant_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn // block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,103 @@
+"""Mamba selective scan (Pallas TPU).
+
+Grid = (B, Di/bd, S/chunk) with the sequence-chunk dim minor-most: the SSM
+state h (bd, N) lives in VMEM scratch and carries across chunks; within a
+chunk the recurrence h = dA*h + dB*x steps sequentially (N and bd are the
+vector lanes — each step is a (bd, N) elementwise FMA, which is VPU work;
+the chunk dim amortizes HBM<->VMEM traffic of x/dt/B/C tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+    y_ref, hout_ref, h_ref,
+    *, chunk: int, n_chunks: int, use_h0: bool,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        if use_h0:
+            h_ref[...] = h0_ref[0].astype(jnp.float32)
+        else:
+            h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...].astype(jnp.float32)          # (bd, N)
+    D = d_ref[...].astype(jnp.float32)          # (1, bd)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)       # (bd,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)     # (bd,)
+        b_t = b_ref[0, t].astype(jnp.float32)       # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)       # (N,)
+        dA = jnp.exp(dt_t[:, None] * A)             # (bd, N)
+        h = dA * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y = jnp.sum(h * c_t[None, :], axis=1) + D[0] * x_t
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ic == n_chunks - 1)
+    def _done():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def selective_scan(
+    x, dt, A, B, C, D, *, init_state=None, bd: int = 512, chunk: int = 128,
+    interpret: bool = False,
+):
+    """x, dt: (B,S,Di); A: (Di,N); B,C: (B,S,N); D: (Di,) ->
+    (y (B,S,Di), final_state (B,Di,N))."""
+    bsz, s, di = x.shape
+    n = A.shape[-1]
+    bd = min(bd, di)
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    nd = di // bd
+
+    use_h0 = init_state is not None
+    h0 = (
+        init_state.astype(jnp.float32)
+        if use_h0
+        else jnp.zeros((bsz, di, n), jnp.float32)
+    )
+    D2 = D.reshape(1, di)
+
+    kernel = functools.partial(
+        _scan_kernel, chunk=chunk, n_chunks=n_chunks, use_h0=use_h0
+    )
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(bsz, nd, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda ib, idd, ic: (ib, ic, idd)),
+            pl.BlockSpec((1, chunk, bd), lambda ib, idd, ic: (ib, ic, idd)),
+            pl.BlockSpec((bd, n), lambda ib, idd, ic: (idd, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, idd, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, idd, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, bd), lambda ib, idd, ic: (0, idd)),
+            pl.BlockSpec((1, bd, n), lambda ib, idd, ic: (ib, idd, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda ib, idd, ic: (ib, ic, idd)),
+            pl.BlockSpec((1, bd, n), lambda ib, idd, ic: (ib, idd, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, di), x.dtype),
+            jax.ShapeDtypeStruct((bsz, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D2, h0)
+    return y, hout

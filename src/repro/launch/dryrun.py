@@ -1,0 +1,162 @@
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, compiles, and fits — and extract the roofline terms.
+
+The first two executable lines below MUST precede any jax import: jax locks
+the device count on first initialization.  512 host devices back both the
+16x16 single-pod mesh and the 2x16x16 multi-pod mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, list_configs
+from repro.launch.mesh import make_production_mesh, mesh_info
+from repro.launch.specs import build_case
+from repro.utils import roofline as rl
+
+ASSIGNED_ARCHS = (
+    "mixtral-8x7b",
+    "jamba-1.5-large-398b",
+    "xlstm-1..3b".replace("..", "."),
+    "stablelm-3b",
+    "granite-8b",
+    "paligemma-3b",
+    "qwen3-0.6b",
+    "minicpm3-4b",
+    "musicgen-medium",
+    "deepseek-moe-16b",
+)
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = True) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    case = build_case(arch, shape, mesh, multi_pod=multi_pod)
+    with mesh:
+        lowered = jax.jit(
+            case.fn,
+            in_shardings=case.in_shardings,
+            out_shardings=case.out_shardings,
+            donate_argnums=getattr(case, "donate_argnums", ()),
+        ).lower(*case.args)
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+
+    report = rl.analyze(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        cost_analysis=cost, hlo_text=hlo, model_flops=case.model_flops,
+    )
+
+    per_dev_bytes = getattr(mem, "argument_size_in_bytes", 0) + getattr(
+        mem, "output_size_in_bytes", 0
+    ) + getattr(mem, "temp_size_in_bytes", 0)
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "ok": True,
+        "compile_s": round(t_compile, 1),
+        "per_device_bytes": int(per_dev_bytes),
+        "per_device_gb": round(per_dev_bytes / 2**30, 3),
+        "hlo_flops": report.hlo_flops,
+        "hlo_bytes": report.hlo_bytes,
+        "collective_bytes": report.collective_bytes,
+        "model_flops": report.model_flops,
+        "compute_ms": round(report.compute_s * 1e3, 3),
+        "memory_ms": round(report.memory_s * 1e3, 3),
+        "collective_ms": round(report.collective_s * 1e3, 3),
+        "dominant": report.dominant,
+        "useful_flops_frac": round(report.useful_flops_frac, 3),
+        "collective_breakdown": report.collective_breakdown,
+        "meta": case.meta,
+    }
+    if verbose:
+        print(
+            f"[dryrun] {arch:>22} {shape_name:<12} {mesh_name:<8} OK "
+            f"compile={t_compile:5.1f}s mem/dev={result['per_device_gb']:.2f}GB "
+            f"compute={result['compute_ms']}ms memory={result['memory_ms']}ms "
+            f"collective={result['collective_ms']}ms dominant={report.dominant} "
+            f"useful={report.useful_flops_frac:.2f}"
+        )
+        print(f"  memory_analysis: {mem}")
+        print("  " + report.collective_breakdown.replace("\n", "\n  "))
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPE_ORDER))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None, help="append results to this JSON file")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else (args.arch,)
+    shapes = SHAPE_ORDER if (args.all or not args.shape) else (args.shape,)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    def _save(results):
+        if not args.json:
+            return
+        existing = []
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                existing = json.load(f)
+        key = lambda r: (r["arch"], r["shape"], r["mesh"])
+        keep = [r for r in existing if key(r) not in {key(r2) for r2 in results}]
+        with open(args.json, "w") as f:
+            json.dump(keep + results, f, indent=1)
+
+    results, failed = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key3 = (arch, shape, "2x16x16" if mp else "16x16")
+                if args.json and os.path.exists(args.json):
+                    with open(args.json) as f:
+                        done = {(r["arch"], r["shape"], r["mesh"]) for r in json.load(f) if r.get("ok")}
+                    if key3 in done and args.skip_done:
+                        continue
+                try:
+                    results.append(
+                        run_case(arch, shape, multi_pod=mp, verbose=not args.quiet)
+                    )
+                    _save(results)  # incremental: survive crashes
+                except Exception as e:  # a failure here is a sharding bug
+                    failed.append((arch, shape, mp, repr(e)))
+                    traceback.print_exc()
+                    print(f"[dryrun] {arch} {shape} multi_pod={mp} FAILED: {e}")
+
+    print(f"\n[dryrun] {len(results)} OK, {len(failed)} failed")
+    for f_ in failed:
+        print("  FAILED:", f_)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Production mesh builders.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import and then calls these.
+
+Single pod:  (16, 16)      axes ("data", "model")     = 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(*, data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    if pod:
+        shape, axes = (pod, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_info(mesh) -> dict:
+    return {
+        "axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_devices": mesh.devices.size,
+    }

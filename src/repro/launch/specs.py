@@ -1,0 +1,267 @@
+"""Dry-run plumbing: ShapeDtypeStruct stand-ins + shardings for every
+(architecture x input-shape x mesh) combination.
+
+``build_case`` returns everything ``jax.jit(...).lower()`` needs — the step
+function, abstract arguments, and in/out shardings — without allocating a
+single real array.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape, get_config
+from repro.core import FedAvg, RoundSpec, make_round_step
+from repro.models import build_model
+from repro.models.sharding import ShardRules, serve_rules, train_rules
+from repro.optim import sgd
+
+PyTree = Any
+
+
+def _sds(tree: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct,)),
+    )
+
+
+def abstract_params(model) -> PyTree:
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+@dataclass
+class Case:
+    """One lowered dry-run case."""
+
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple            # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    model_flops: float
+    meta: dict
+    donate_argnums: tuple = ()
+
+
+def active_param_count(cfg: ArchConfig, params_abs: PyTree) -> float:
+    """N_active for MODEL_FLOPS: routed experts count at top_k/n_experts."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_abs)
+    total = 0.0
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        n = float(np.prod(leaf.shape))
+        if cfg.moe is not None and "ffn" in key and "shared" not in key and (
+            "w_gate" in key or "w_up" in key or "w_down" in key
+        ):
+            n *= cfg.moe.top_k / cfg.moe.n_experts
+        total += n
+    return total
+
+
+def token_batch_specs(cfg: ArchConfig, shape: InputShape, *, clients: int, steps: int):
+    """Abstract FL-round batch: leaves (C, steps, B, ...)."""
+    per_client = shape.global_batch // clients
+    assert per_client >= 1, f"batch {shape.global_batch} < clients {clients}"
+    s_tokens = shape.seq_len - cfg.frontend_tokens
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((clients, steps, per_client, s_tokens), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((clients, steps, per_client, s_tokens), jnp.int32),
+    }
+    if cfg.frontend_tokens:
+        fd = cfg.frontend_dim or cfg.d_model
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (clients, steps, per_client, cfg.frontend_tokens, fd), jnp.bfloat16
+        )
+    return batch
+
+
+def build_train_case(arch_name: str, shape: InputShape, mesh, *, multi_pod: bool,
+                     ce_chunk: int = 512) -> Case:
+    from repro.models import transformer as tfm
+
+    cfg = get_config(arch_name)
+    model = build_model(cfg, ce_chunk=ce_chunk)
+    rules = train_rules(mesh, multi_pod, cfg.execution_mode)
+    params_abs = abstract_params(model)
+    param_spec = model.param_specs(rules)
+
+    from repro.models.layers import moe as moe_lib
+
+    # sequence-parallel residual saves (see transformer.CARRY_SHARDING).
+    # Parallel mode leaves the carry to GSPMD: inside shard_map the client's
+    # batch already bounds the save; constraints there measurably backfired
+    # (EXPERIMENTS.md §Perf log).
+    if cfg.execution_mode == "parallel":
+        tfm.CARRY_SHARDING = None
+        moe_lib.BATCH_SHARDING = None
+        moe_lib.FF_SHARDING = None
+        moe_lib.MODEL_LAST_SHARDING = None
+    else:
+        # Pin ONLY the batch dim of the layer-scan carry.  Without it GSPMD
+        # replicates the carry across the batch axes (fsdp: 36x309GB saves
+        # for granite).  Pinning S over `model` as well was tried and
+        # refuted - per-layer fp32 all-gathers of the residual cost more
+        # than the saves they shard (EXPERIMENTS.md §Perf).
+        tfm.CARRY_SHARDING = NamedSharding(mesh, P(rules.batch_axes, None, None))
+        moe_lib.BATCH_SHARDING = NamedSharding(mesh, P(rules.batch_axes))
+        moe_lib.FF_SHARDING = NamedSharding(
+            mesh, P(rules.batch_axes, None, None, rules.model_axis)
+        )
+        moe_lib.MODEL_LAST_SHARDING = NamedSharding(
+            mesh, P(rules.batch_axes, None, None, rules.model_axis)
+        )
+
+    if cfg.execution_mode == "parallel":
+        clients = rules.size(rules.client_axes)
+        batch_axes = rules.client_axes
+    else:
+        clients = 1
+        batch_axes = rules.batch_axes
+
+    steps = 1  # one local step + aggregation is the canonical lowered round
+    batch = token_batch_specs(cfg, shape, clients=clients, steps=steps)
+    if cfg.execution_mode == "parallel":
+        batch_spec = jax.tree.map(lambda x: P(batch_axes), batch)
+    else:
+        batch_spec = jax.tree.map(lambda x: P(None, None, batch_axes), batch)
+
+    strategy = FedAvg()
+    round_step = make_round_step(
+        model.loss_fn, sgd(0.05), strategy,
+        RoundSpec(max_steps=steps, execution_mode=cfg.execution_mode,
+                  microbatches=cfg.microbatches),
+        mesh=mesh if cfg.execution_mode == "parallel" else None,
+        client_axes=rules.client_axes,
+        param_shardings=(
+            _named(mesh, param_spec) if cfg.execution_mode != "parallel" else None
+        ),
+    )
+
+    args = (
+        params_abs,
+        (),  # FedAvg server state
+        batch,
+        jax.ShapeDtypeStruct((clients,), jnp.float32),
+        jax.ShapeDtypeStruct((clients,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    in_shardings = (
+        _named(mesh, param_spec),
+        None,
+        _named(mesh, batch_spec),
+        NamedSharding(mesh, P()),
+        NamedSharding(mesh, P()),
+        NamedSharding(mesh, P()),
+    )
+    out_shardings = (
+        _named(mesh, param_spec),
+        None,
+        None,
+    )
+
+    n_active = active_param_count(cfg, params_abs)
+    model_flops = 6.0 * n_active * shape.global_batch * shape.seq_len
+    return Case(
+        arch=arch_name, shape=shape.name, fn=round_step, args=args,
+        in_shardings=in_shardings, out_shardings=out_shardings,
+        model_flops=model_flops,
+        meta={"clients": clients, "mode": cfg.execution_mode,
+              "n_active_params": n_active},
+    )
+
+
+def serve_batch_specs(cfg: ArchConfig, shape: InputShape):
+    if shape.kind == "prefill":
+        s_tokens = shape.seq_len - cfg.frontend_tokens
+        batch = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, s_tokens), jnp.int32)}
+        if cfg.frontend_tokens:
+            fd = cfg.frontend_dim or cfg.d_model
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.frontend_tokens, fd), jnp.bfloat16
+            )
+        return batch
+    return {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+
+
+def build_serve_case(arch_name: str, shape: InputShape, mesh, *, multi_pod: bool) -> Case:
+    from repro.models import transformer as tfm
+    from repro.models.layers import moe as moe_lib
+
+    cfg = get_config(arch_name)
+    model = build_model(cfg)
+    rules = serve_rules(mesh, multi_pod)
+    params_abs = abstract_params(model)
+    param_spec = model.param_specs(rules)
+    tfm.CARRY_SHARDING = (
+        NamedSharding(mesh, P(rules.batch_axes, "model", None))
+        if shape.kind == "prefill"
+        else None  # decode carries are (B,1,d): tiny
+    )
+    moe_lib.BATCH_SHARDING = NamedSharding(mesh, P(rules.batch_axes))
+    moe_lib.FF_SHARDING = NamedSharding(
+        mesh, P(rules.batch_axes, None, None, "model")
+    )
+    moe_lib.MODEL_LAST_SHARDING = NamedSharding(
+        mesh, P(rules.batch_axes, None, None, "model")
+    )
+    batch = serve_batch_specs(cfg, shape)
+    batch_spec = jax.tree.map(
+        lambda x: rules.spec(
+            rules.batch_axes, *([None] * (len(x.shape) - 1)), dim_sizes=x.shape
+        ),
+        batch,
+    )
+
+    n_active = active_param_count(cfg, params_abs)
+
+    if shape.kind == "prefill":
+        fn = partial(model.prefill, ctx=shape.seq_len)
+        cache_spec = model.cache_specs(rules, shape.global_batch, shape.seq_len)
+        args = (params_abs, batch)
+        in_shardings = (_named(mesh, param_spec), _named(mesh, batch_spec))
+        out_shardings = (NamedSharding(mesh, P()), _named(mesh, cache_spec))
+        model_flops = 2.0 * n_active * shape.global_batch * shape.seq_len
+    else:
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        cache_spec = model.cache_specs(rules, shape.global_batch, shape.seq_len)
+        fn = partial(model.decode_step, ctx=shape.seq_len)
+        args = (params_abs, batch, cache_abs)
+        donate = (2,)  # donate the KV cache: in-place update, not 2x copies
+        in_shardings = (
+            _named(mesh, param_spec),
+            _named(mesh, batch_spec),
+            _named(mesh, cache_spec),
+        )
+        out_shardings = (NamedSharding(mesh, P()), _named(mesh, cache_spec))
+        model_flops = 2.0 * n_active * shape.global_batch  # one token per seq
+
+    return Case(
+        arch=arch_name, shape=shape.name, fn=fn, args=args,
+        in_shardings=in_shardings, out_shardings=out_shardings,
+        model_flops=model_flops,
+        meta={"mode": "serve", "kind": shape.kind},
+        donate_argnums=(2,) if shape.kind == "decode" else (),
+    )
+
+
+def build_case(arch_name: str, shape: InputShape, mesh, *, multi_pod: bool) -> Case:
+    if shape.kind == "train":
+        return build_train_case(arch_name, shape, mesh, multi_pod=multi_pod)
+    return build_serve_case(arch_name, shape, mesh, multi_pod=multi_pod)

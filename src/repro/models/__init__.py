@@ -1,0 +1,85 @@
+"""Model API: a uniform functional interface over every architecture family.
+
+``build_model(arch_name_or_cfg)`` returns a `Model` whose methods are pure
+functions suitable for jit/pjit:
+
+    init(key) -> params
+    loss_fn(params, batch) -> (loss, metrics)
+    param_specs(rules) -> PartitionSpec pytree (transformers)
+    prefill / decode_step / init_cache / cache_specs (transformers)
+    trainable_mask() -> bool pytree (head models; None = all trainable)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.configs.base import ArchConfig, get_config
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: Any
+    arch: ArchConfig
+    init: Callable
+    loss_fn: Callable                       # (params, batch) -> (loss, metrics)
+    param_specs: Callable                   # (rules) -> spec pytree
+    trainable_mask: Optional[Callable] = None
+    prefill: Callable | None = None         # (params, batch, context_len) -> (logits, cache)
+    decode_step: Callable | None = None     # (params, batch, cache, context_len)
+    init_cache: Callable | None = None      # (batch, context_len) -> cache
+    cache_specs: Callable | None = None
+
+    @property
+    def name(self) -> str:
+        return self.arch.name
+
+
+def build_model(arch, *, ce_chunk: int = 0) -> Model:
+    arch_cfg = get_config(arch) if isinstance(arch, str) else arch
+
+    if arch_cfg.family == "cnn":
+        from repro.configs.resnet18_cifar10 import CNN_CONFIG
+        from . import resnet
+
+        cfg = CNN_CONFIG if not arch_cfg.name.endswith("reduced") else CNN_CONFIG.reduced()
+        return Model(
+            cfg=cfg,
+            arch=arch_cfg,
+            init=lambda key: resnet.init_params(key, cfg),
+            loss_fn=lambda p, b: resnet.loss_fn(cfg, p, b),
+            param_specs=lambda rules: None,
+        )
+
+    if arch_cfg.family == "head":
+        from repro.configs.mobilenet_head_office31 import HEAD_CONFIG
+        from . import headmodel
+
+        cfg = HEAD_CONFIG if not arch_cfg.name.endswith("reduced") else HEAD_CONFIG.reduced()
+        return Model(
+            cfg=cfg,
+            arch=arch_cfg,
+            init=lambda key: headmodel.init_params(key, cfg),
+            loss_fn=lambda p, b: headmodel.loss_fn(cfg, p, b),
+            param_specs=lambda rules: None,
+            trainable_mask=lambda params: headmodel.trainable_mask(params),
+        )
+
+    from . import transformer as tfm
+
+    cfg = arch_cfg
+    return Model(
+        cfg=cfg,
+        arch=arch_cfg,
+        init=lambda key: tfm.init_params(key, cfg),
+        loss_fn=lambda p, b: tfm.loss_fn(cfg, p, b, ce_chunk=ce_chunk),
+        param_specs=lambda rules: tfm.param_specs(cfg, rules),
+        prefill=lambda p, b, ctx: tfm.prefill(cfg, p, b, context_len=ctx),
+        decode_step=lambda p, b, cache, ctx: tfm.decode_step(cfg, p, b, cache, context_len=ctx),
+        init_cache=lambda batch, ctx: tfm.init_cache(cfg, batch, ctx),
+        cache_specs=lambda rules, batch, ctx: tfm.cache_specs(cfg, rules, batch, ctx),
+    )

@@ -1,0 +1,60 @@
+"""Base/Head split model — the paper's §4.1 Android personalization design.
+
+The frozen *Base Model* (MobileNetV2 feature extractor in the paper) is a
+fixed random projection producing `feature_dim` features; FL trains only the
+2-layer *Head Model*.  ``trainable_mask`` realizes the freeze as a pytree
+partition consumed by core.rounds (frozen leaves pass through local SGD
+untouched and are excluded from aggregation traffic accounting).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "base": {  # frozen feature extractor (identity-ish random projection)
+            "w": jax.random.normal(ks[0], (cfg.feature_dim, cfg.feature_dim), jnp.float32)
+            / np.sqrt(cfg.feature_dim),
+        },
+        "head": {
+            "w1": jax.random.normal(ks[1], (cfg.feature_dim, cfg.hidden_dim), jnp.float32)
+            / np.sqrt(cfg.feature_dim),
+            "b1": jnp.zeros((cfg.hidden_dim,), jnp.float32),
+            "w2": jax.random.normal(ks[2], (cfg.hidden_dim, cfg.num_classes), jnp.float32)
+            / np.sqrt(cfg.hidden_dim),
+            "b2": jnp.zeros((cfg.num_classes,), jnp.float32),
+        },
+    }
+
+
+def trainable_mask(params) -> dict:
+    """True = FL-trainable (head), False = frozen (base)."""
+    return {
+        "base": jax.tree.map(lambda _: False, params["base"]),
+        "head": jax.tree.map(lambda _: True, params["head"]),
+    }
+
+
+def forward(cfg, params, x):
+    feats = jax.nn.relu(x @ params["base"]["w"])  # frozen base
+    h = jax.nn.relu(feats @ params["head"]["w1"] + params["head"]["b1"])
+    return h @ params["head"]["w2"] + params["head"]["b2"]
+
+
+def loss_fn(cfg, params, batch):
+    logits = forward(cfg, params, batch["x"])
+    labels = batch["y"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"ce": loss, "acc": acc}
+
+
+def param_specs(cfg, params) -> dict:
+    return jax.tree.map(lambda x: P(), params)

@@ -1,0 +1,131 @@
+"""GQA/MHA attention block: projections + RoPE + (flash) attention + caches.
+
+Supports: grouped-query attention, per-head QK-RMSNorm (qwen3), sliding
+window (mixtral / long-context SWA variant), full and ring KV caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+from .embeddings import apply_rope, rope_angles
+
+
+def _dense_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+
+
+def init_attention(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": _dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": _dense_init(ks[1], (d, kv, hd), d, dtype),
+        "wv": _dense_init(ks[2], (d, kv, hd), d, dtype),
+        "wo": _dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qk_norm:
+        params["q_scale"] = jnp.zeros((hd,), jnp.float32)
+        params["k_scale"] = jnp.zeros((hd,), jnp.float32)
+    return params
+
+
+def spec_attention(cfg, rules):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    m, f = rules.model_axis, rules.fsdp
+    specs = {
+        "wq": rules.spec(f, m, None, dim_sizes=(d, h, hd)),
+        "wk": rules.spec(f, m, None, dim_sizes=(d, kv, hd)),
+        "wv": rules.spec(f, m, None, dim_sizes=(d, kv, hd)),
+        "wo": rules.spec(m, None, f, dim_sizes=(h, hd, d)),
+    }
+    if cfg.qk_norm:
+        specs["q_scale"] = P(None)
+        specs["k_scale"] = P(None)
+    return specs
+
+
+def _qk_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * (1.0 + scale)).astype(x.dtype)
+
+
+def _project_qkv(cfg, params, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = _qk_norm(q, params["q_scale"])
+        k = _qk_norm(k, params["k_scale"])
+    cos, sin = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attention_forward(cfg, params, x, *, window=None):
+    """Full-sequence causal attention (train / prefill). x: (B,S,D)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    win = window if window is not None else cfg.sliding_window
+    out = ops.flash_attention(q, k, v, causal=True, window=win)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------- caches ----------------
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, kv, hd), dtype),
+    }
+
+
+def spec_kv_cache(cfg, rules, batch: int, cache_len: int):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    m = rules.model_axis
+    msize = rules.size(m)
+    if m is not None and kv % max(1, msize) == 0:
+        s = rules.spec(rules.batch_axes, None, m, None,
+                       dim_sizes=(batch, cache_len, kv, hd))
+    else:
+        # GQA heads don't divide the model axis: shard the sequence dim —
+        # decode attention reduces over S, XLA partial-softmaxes across it
+        s = rules.spec(rules.batch_axes, m, None, None,
+                       dim_sizes=(batch, cache_len, kv, hd))
+    return {"k": s, "v": s}
+
+
+def attention_decode(cfg, params, x, cache, pos, *, ring: bool):
+    """One-token decode. x: (B,1,D); pos: scalar int32 absolute position.
+
+    ring=True -> sliding-window ring buffer of size cache_len; else linear
+    cache of the full context.  Returns (out (B,1,D), new_cache).
+    """
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, params, x, positions)
+
+    slot = pos % cache_len if ring else jnp.minimum(pos, cache_len - 1)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+
+    idx = jnp.arange(cache_len)
+    if ring:
+        # slot i holds absolute position: the most recent write at that slot
+        age = (slot - idx) % cache_len           # 0 = newest
+        abs_pos = pos - age
+        valid = abs_pos >= jnp.maximum(0, pos + 1 - cache_len)
+    else:
+        valid = idx <= pos
+    kv_valid = jnp.broadcast_to(valid[None], (b, cache_len))
+
+    out = ops.decode_attention(q[:, 0], k_cache, v_cache, kv_valid=kv_valid)
+    out = jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None]
+    return out, {"k": k_cache, "v": v_cache}

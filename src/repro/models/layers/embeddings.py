@@ -1,0 +1,43 @@
+"""Token embeddings + rotary position encodings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    scale = 1.0 / np.sqrt(d_model)
+    return {
+        "table": (jax.random.normal(key, (vocab, d_model), jnp.float32) * scale).astype(dtype)
+    }
+
+
+def spec_embedding(rules, vocab: int, d_model: int):
+    return {"table": rules.spec(rules.model_axis, rules.fsdp, dim_sizes=(vocab, d_model))}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2), fp32."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over heads."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]  # add head dim
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dtype)

@@ -1,0 +1,137 @@
+"""Mamba (selective SSM) block — Jamba's recurrent layer.
+
+Train/prefill use the parallel associative-scan selective scan (Pallas kernel
+on TPU, jnp oracle elsewhere); decode is the O(1) recurrent step carrying
+(conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+
+
+def _dense_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or int(np.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, cfg.ssm.d_state, cfg.ssm.d_conv
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    di, dtr, n, dc = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # dt bias init so softplus(dt) spans ~[1e-3, 1e-1] (mamba reference)
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (di,), jnp.float32)
+        * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3)
+    )
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": _dense_init(ks[1], (dc, di), dc, dtype),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": _dense_init(ks[2], (di, dtr + 2 * n), di, dtype),
+        "dt_proj": _dense_init(ks[3], (dtr, di), dtr, dtype),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _dense_init(ks[5], (di, d), di, dtype),
+    }
+
+
+def spec_mamba(cfg, rules):
+    d = cfg.d_model
+    di, dtr, n, dc = _dims(cfg)
+    m, f = rules.model_axis, rules.fsdp
+    return {
+        "in_proj": rules.spec(f, m, dim_sizes=(d, 2 * di)),
+        "conv_w": rules.spec(None, m, dim_sizes=(dc, di)),
+        "conv_b": rules.spec(m, dim_sizes=(di,)),
+        "x_proj": rules.spec(m, None, dim_sizes=(di, dtr + 2 * n)),
+        "dt_proj": rules.spec(None, m, dim_sizes=(dtr, di)),
+        "dt_bias": rules.spec(m, dim_sizes=(di,)),
+        "A_log": rules.spec(m, None, dim_sizes=(di, n)),
+        "D": rules.spec(m, dim_sizes=(di,)),
+        "out_proj": rules.spec(m, f, dim_sizes=(di, d)),
+    }
+
+
+def _ssm_inputs(cfg, params, xc):
+    """xc: post-conv activations (B,S,di) -> (dt, B, C)."""
+    di, dtr, n, _ = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", xc, params["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", proj[..., :dtr], params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )
+    Bm = proj[..., dtr : dtr + n].astype(jnp.float32)
+    Cm = proj[..., dtr + n :].astype(jnp.float32)
+    return dt, Bm, Cm
+
+
+def mamba_forward(cfg, params, u):
+    """u: (B,S,d) -> (B,S,d). Parallel selective scan over the sequence."""
+    di, dtr, n, dc = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", u, params["in_proj"])
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv1d
+    x_pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(
+        x_pad[:, i : i + x.shape[1]] * params["conv_w"][i][None, None]
+        for i in range(dc)
+    ) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm = _ssm_inputs(cfg, params, xc)
+    A = -jnp.exp(params["A_log"])
+    y, _ = ops.selective_scan(xc, dt, A, Bm, Cm, params["D"])
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"])
+
+
+# ---------------- decode ----------------
+def init_mamba_cache(cfg, batch: int, dtype):
+    di, _, n, dc = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def spec_mamba_cache(cfg, rules, batch: int):
+    di, _, n, dc = _dims(cfg)
+    return {
+        "conv": rules.spec(rules.batch_axes, None, rules.model_axis,
+                           dim_sizes=(batch, dc - 1, di)),
+        "ssm": rules.spec(rules.batch_axes, rules.model_axis, None,
+                          dim_sizes=(batch, di, n)),
+    }
+
+
+def mamba_decode(cfg, params, u, cache):
+    """u: (B,1,d) -> (out (B,1,d), new_cache). O(1) recurrent step."""
+    di, dtr, n, dc = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", u, params["in_proj"])[:, 0]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, di)
+
+    conv_buf = jnp.concatenate([cache["conv"], x[:, None]], axis=1)  # (B, dc, di)
+    xc = jnp.einsum("bcd,cd->bd", conv_buf, params["conv_w"]) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm = _ssm_inputs(cfg, params, xc[:, None])
+    A = -jnp.exp(params["A_log"])
+    y, new_ssm = ops.selective_scan_step(
+        xc, dt[:, 0], A, Bm[:, 0], Cm[:, 0], params["D"], cache["ssm"]
+    )
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bd,de->be", y, params["out_proj"])[:, None]
+    return out, {"conv": conv_buf[:, 1:], "ssm": new_ssm}

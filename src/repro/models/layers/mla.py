@@ -1,0 +1,155 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Q and KV are produced from low-rank latents; the decode cache stores only the
+compressed KV latent (+ the shared rope key), and decode uses the *absorbed*
+formulation so per-head K/V are never materialized over the whole cache:
+
+    score_h(t) = q_nope_h^T W_uk_h c_t + q_rope_h^T k_rope_t
+               = (W_uk_h^T q_nope_h)^T c_t + ...
+    out_h      = W_uv_h^T ( sum_t p_t c_t )
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ref as kref
+from .embeddings import apply_rope, rope_angles
+
+
+def _dense_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": _dense_init(ks[0], (d, m.q_lora_rank), d, dtype),
+        "wq_b": _dense_init(ks[1], (m.q_lora_rank, h, qk_dim), m.q_lora_rank, dtype),
+        "wkv_a": _dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), d, dtype),
+        "wk_b": _dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim), m.kv_lora_rank, dtype),
+        "wv_b": _dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim), m.kv_lora_rank, dtype),
+        "wo": _dense_init(ks[5], (h, m.v_head_dim, d), h * m.v_head_dim, dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+    }
+
+
+def spec_mla(cfg, rules):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    mdl, f = rules.model_axis, rules.fsdp
+    return {
+        "wq_a": rules.spec(f, mdl, dim_sizes=(d, m.q_lora_rank)),
+        "wq_b": rules.spec(None, mdl, None, dim_sizes=(m.q_lora_rank, h, qk_dim)),
+        "wkv_a": rules.spec(f, None, dim_sizes=(d, m.kv_lora_rank + m.qk_rope_head_dim)),
+        "wk_b": rules.spec(None, mdl, None, dim_sizes=(m.kv_lora_rank, h, m.qk_nope_head_dim)),
+        "wv_b": rules.spec(None, mdl, None, dim_sizes=(m.kv_lora_rank, h, m.v_head_dim)),
+        "wo": rules.spec(mdl, None, f, dim_sizes=(h, m.v_head_dim, d)),
+        "q_norm": P(None),
+        "kv_norm": P(None),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * (1.0 + scale)).astype(x.dtype)
+
+
+def _latents(cfg, params, x, positions):
+    """Shared Q/KV latent computation. Returns per-head q parts + latent kv."""
+    m = cfg.mla
+    ql = _rms(jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), params["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", ql, params["wq_b"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim :]
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv = _rms(kv_a[..., : m.kv_lora_rank], params["kv_norm"])
+    k_rope = kv_a[..., m.kv_lora_rank :]  # (B,S,rope_dim), shared across heads
+
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(cfg, params, x, *, window=None):
+    """Full-sequence causal MLA (train / prefill). x: (B,S,D)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _latents(cfg, params, x, positions)
+
+    # expand per-head K/V from the latent (fine for prefill: O(S) memory)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"])
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], q_rope.shape[:2] + (cfg.n_heads, m.qk_rope_head_dim))],
+        -1,
+    )
+    out = kref.attention(qf, kf, v, causal=True, window=window or cfg.sliding_window, scale=scale)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def spec_mla_cache(cfg, rules, batch: int, cache_len: int):
+    m = cfg.mla
+    return {
+        "c_kv": rules.spec(rules.batch_axes, rules.model_axis, None,
+                           dim_sizes=(batch, cache_len, m.kv_lora_rank)),
+        "k_rope": rules.spec(rules.batch_axes, rules.model_axis, None,
+                             dim_sizes=(batch, cache_len, m.qk_rope_head_dim)),
+    }
+
+
+def mla_decode(cfg, params, x, cache, pos, *, ring: bool):
+    """Absorbed one-token MLA decode. x: (B,1,D)."""
+    m = cfg.mla
+    b = x.shape[0]
+    cache_len = cache["c_kv"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _latents(cfg, params, x, positions)
+
+    slot = pos % cache_len if ring else jnp.minimum(pos, cache_len - 1)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, slot, 0))
+
+    idx = jnp.arange(cache_len)
+    if ring:
+        age = (slot - idx) % cache_len
+        valid = (pos - age) >= jnp.maximum(0, pos + 1 - cache_len)
+    else:
+        valid = idx <= pos
+
+    # absorbed scores: q_abs = W_uk^T q_nope -> (B,H,rank)
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0].astype(jnp.float32),
+                       params["wk_b"].astype(jnp.float32))
+    scores = jnp.einsum("bhr,bsr->bhs", q_abs, c_kv.astype(jnp.float32))
+    scores += jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = jnp.where(valid[None, None], scores * scale, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, c_kv.astype(jnp.float32))  # latent ctx
+    out = jnp.einsum("bhr,rhk->bhk", ctx, params["wv_b"].astype(jnp.float32))
+    out = jnp.einsum("bhk,hkd->bd", out.astype(x.dtype), params["wo"])[:, None]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

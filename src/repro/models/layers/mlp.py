@@ -1,0 +1,35 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+        "w_up": _dense_init(ks[1], (d_model, d_ff), d_model, dtype),
+        "w_down": _dense_init(ks[2], (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def spec_mlp(rules, d_model: int, d_ff: int):
+    m, f = rules.model_axis, rules.fsdp
+    return {
+        "w_gate": rules.spec(f, m, dim_sizes=(d_model, d_ff)),
+        "w_up": rules.spec(f, m, dim_sizes=(d_model, d_ff)),
+        "w_down": rules.spec(m, f, dim_sizes=(d_ff, d_model)),
+    }
+
+
+def mlp_forward(params, x, act: str = "silu"):
+    a = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    g = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a)
+    h = g * jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

@@ -1,0 +1,178 @@
+"""Mixture-of-Experts layer: top-k token-choice routing, sort-based dispatch.
+
+TPU-native adaptation: instead of GShard's one-hot dispatch tensors
+(T x E x C blows up for fine-grained MoE like DeepSeek's 64-expert top-6),
+we sort (token, choice) pairs by expert id and scatter into a contiguous
+(E, capacity, d) buffer — O(Tk) memory, MXU-friendly batched expert matmuls.
+Supports shared experts (DeepSeekMoE) and capacity-based token dropping.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .mlp import init_mlp, mlp_forward, spec_mlp
+
+
+def _dense_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+
+
+# Sequential-mode batch pinning: GSPMD flip-flops between batch-sharded and
+# model-sharded layouts around the dispatch scatter (multi-GB reshards);
+# launch/specs.py sets this to NamedSharding(mesh, P(batch_axes)) so every
+# dispatch-side tensor stays batch-sharded.  None inside shard_map / on CPU.
+BATCH_SHARDING = None
+FF_SHARDING = None  # (B, e, cap, dff) expert-hidden sharding (dff over model)
+
+
+def _pin_batch(x):
+    if BATCH_SHARDING is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, BATCH_SHARDING)
+
+
+def _pin_ff(x):
+    if FF_SHARDING is None:
+        return _pin_batch(x)
+    return jax.lax.with_sharding_constraint(x, FF_SHARDING)
+
+
+MODEL_LAST_SHARDING = None  # (B, ..., d) with d over model
+
+
+def _pin_model_last(x):
+    if MODEL_LAST_SHARDING is None:
+        return _pin_batch(x)
+    return jax.lax.with_sharding_constraint(x, MODEL_LAST_SHARDING)
+
+
+def expert_ff_dim(cfg) -> int:
+    return cfg.moe.d_expert or cfg.d_ff
+
+
+def init_moe(key, cfg, dtype):
+    mc = cfg.moe
+    d, dff = cfg.d_model, expert_ff_dim(cfg)
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": _dense_init(ks[0], (d, mc.n_experts), d, jnp.float32),
+        "w_gate": _dense_init(ks[1], (mc.n_experts, d, dff), d, dtype),
+        "w_up": _dense_init(ks[2], (mc.n_experts, d, dff), d, dtype),
+        "w_down": _dense_init(ks[3], (mc.n_experts, dff, d), dff, dtype),
+    }
+    if mc.n_shared_experts:
+        params["shared"] = init_mlp(ks[4], d, dff * mc.n_shared_experts, dtype)
+    return params
+
+
+def spec_moe(cfg, rules):
+    mc = cfg.moe
+    d, dff = cfg.d_model, expert_ff_dim(cfg)
+    m, f = rules.model_axis, rules.fsdp
+    e = mc.n_experts
+    # 2D-shard expert weights (d over fsdp, d_ff over model); the expert dim
+    # stays whole so token dispatch remains batch-local (see moe_forward)
+    ew = (None, f, m)
+    ed = (None, m, f)
+    specs = {
+        "router": rules.spec(None, None, dim_sizes=(d, e)),
+        "w_gate": rules.spec(*ew, dim_sizes=(e, d, dff)),
+        "w_up": rules.spec(*ew, dim_sizes=(e, d, dff)),
+        "w_down": rules.spec(*ed, dim_sizes=(e, dff, d)),
+    }
+    if mc.n_shared_experts:
+        specs["shared"] = spec_mlp(rules, d, dff * mc.n_shared_experts)
+    return specs
+
+
+def router_topk(cfg, params, x_flat):
+    """x_flat: (T, d) -> (probs (T,k), idx (T,k), aux_losses dict)."""
+    mc = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), params["router"])
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs_full, mc.top_k)
+    topv = topv / jnp.sum(topv, -1, keepdims=True)  # renormalize over chosen
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    e = mc.n_experts
+    assign = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    f_e = assign / jnp.maximum(1.0, topi.size)
+    p_e = jnp.mean(probs_full, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return topv, topi, {"moe_aux": aux, "moe_z": z}
+
+
+def _dispatch_one(x_seq, topi, topv, *, e: int, k: int, capacity: int):
+    """Dispatch ONE sequence's tokens. x_seq: (S,d); topi/topv: (S,k).
+
+    Returns (buf (e, capacity, d), dst (S*k,), scale (S*k,), src_tok, keep).
+    Sequence-local so a batch-sharded vmap keeps every sort/scatter on its
+    own shard (global-token dispatch defeats GSPMD and replicates T*k
+    gathers; see DESIGN.md §Perf notes).
+    """
+    s, d = x_seq.shape
+    flat_e = topi.reshape(-1)                       # (S*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(sorted_e, length=e)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)]
+    )[:-1]
+    pos = jnp.arange(s * k) - seg_start[sorted_e]
+    keep = pos < capacity
+    dst = jnp.where(keep, sorted_e * capacity + pos, e * capacity)  # drop row
+    src_tok = order // k
+    buf = jnp.zeros((e * capacity + 1, d), x_seq.dtype).at[dst].set(x_seq[src_tok])
+    scale = topv.reshape(-1)[order]
+    return buf[:-1].reshape(e, capacity, d), dst, scale, src_tok, keep
+
+
+def moe_forward(cfg, params, x, *, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (out, aux_losses).  Per-sequence capacity dispatch."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    k = mc.top_k
+    e = mc.n_experts
+
+    topv, topi, aux = router_topk(cfg, params, x.reshape(b * s, d))
+    topv = topv.reshape(b, s, k)
+    topi = topi.reshape(b, s, k)
+
+    capacity = max(1, int(np.ceil(s * k * capacity_factor / e)))
+    buf, dst, scale, src_tok, keep = jax.vmap(
+        partial(_dispatch_one, e=e, k=k, capacity=capacity)
+    )(x, topi, topv)                                 # buf: (B, e, cap, d)
+    buf = _pin_batch(buf)  # d stays whole: the cheap gather is the weights
+
+    # batched expert FFN (MXU path)
+    g = _pin_ff(jnp.einsum("becd,edf->becf", buf, params["w_gate"]))
+    u = _pin_ff(jnp.einsum("becd,edf->becf", buf, params["w_up"]))
+    h = _pin_ff((jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)) * u)
+    out_buf = _pin_batch(jnp.einsum("becf,efd->becd", h, params["w_down"]))
+    out_buf = out_buf.reshape(b, e * capacity, d)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((b, 1, d), out_buf.dtype)], axis=1
+    )
+
+    def _combine_one(ob, dst_i, scale_i, src_i):
+        gathered = ob[dst_i] * scale_i[:, None].astype(ob.dtype)
+        return jnp.zeros((s, d), ob.dtype).at[src_i].add(gathered)
+
+    out = _pin_batch(jax.vmap(_combine_one)(out_buf, dst, scale, src_tok))
+
+    if mc.n_shared_experts:
+        out = out + mlp_forward(params["shared"], x, cfg.act)
+
+    aux["moe_drop_frac"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return out, aux
+
+
+def moe_loss(aux: dict, cfg) -> jnp.ndarray:
+    mc = cfg.moe
+    return mc.router_aux_coef * aux["moe_aux"] + mc.router_z_coef * aux["moe_z"]

@@ -1,0 +1,57 @@
+"""Normalization layers (pure functions + init/spec pairs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def groupnorm(x, scale, bias, groups: int = 8, eps: float = 1e-5):
+    """GroupNorm over channel-last conv activations (N,H,W,C).
+
+    Used by the FL ResNet: BatchNorm's running statistics break under
+    federated averaging of divergent clients (DESIGN.md), GroupNorm is the
+    standard FL substitute.
+    """
+    n, h, w, c = x.shape
+    dtype = x.dtype
+    xg = x.astype(jnp.float32).reshape(n, h, w, groups, c // groups)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(n, h, w, c)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def init_norm(cfg, d: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def spec_norm(cfg):
+    if cfg.norm == "rmsnorm":
+        return {"scale": P(None)}
+    return {"scale": P(None), "bias": P(None)}
+
+
+def apply_norm(cfg, params, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])

@@ -1,0 +1,280 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, true recurrence) [arXiv:2405.04517].
+
+TPU adaptation (DESIGN.md): mLSTM's training path uses the stabilized
+quadratic form evaluated in query chunks (lax.map + checkpoint) so peak
+memory is O(S * chunk) instead of O(S^2); decode carries the (C, n, m)
+matrix-memory state with O(1) per-token cost.  sLSTM has a hidden-to-hidden
+recurrence with no parallel form, so it scans over time (block-diagonal
+per-head recurrent weights).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _dense_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+
+
+# ============================== mLSTM ==============================
+def _mlstm_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    hd = d_inner // cfg.n_heads
+    return d_inner, cfg.n_heads, hd
+
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    di, h, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": _dense_init(ks[0], (d, 2 * di), d, dtype),
+        "wq": _dense_init(ks[1], (di, h, hd), di, dtype),
+        "wk": _dense_init(ks[2], (di, h, hd), di, dtype),
+        "wv": _dense_init(ks[3], (di, h, hd), di, dtype),
+        "w_gates": _dense_init(ks[4], (di, h, 2), di, jnp.float32),
+        # forget-gate bias init ~ +3..6 keeps early memories (xLSTM paper)
+        "b_gates": jnp.stack(
+            [jnp.zeros((h,)), jnp.linspace(3.0, 6.0, h)], axis=-1
+        ).astype(jnp.float32),
+        "o_norm": jnp.zeros((h, hd), jnp.float32),
+        "down_proj": _dense_init(ks[5], (di, d), di, dtype),
+    }
+
+
+def spec_mlstm(cfg, rules):
+    d = cfg.d_model
+    di, h, hd = _mlstm_dims(cfg)
+    m, f = rules.model_axis, rules.fsdp
+    return {
+        "up_proj": rules.spec(f, m, dim_sizes=(d, 2 * di)),
+        "wq": rules.spec(m, None, None, dim_sizes=(di, h, hd)),
+        "wk": rules.spec(m, None, None, dim_sizes=(di, h, hd)),
+        "wv": rules.spec(m, None, None, dim_sizes=(di, h, hd)),
+        "w_gates": rules.spec(m, None, None, dim_sizes=(di, h, 2)),
+        "b_gates": P(None, None),
+        "o_norm": P(None, None),
+        "down_proj": rules.spec(m, f, dim_sizes=(di, d)),
+    }
+
+
+def _headwise_rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * (1.0 + scale)).astype(x.dtype)
+
+
+def _mlstm_qkv_gates(cfg, params, x_in):
+    q = jnp.einsum("bsd,dhk->bshk", x_in, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x_in, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x_in, params["wv"])
+    gates = (
+        jnp.einsum("bsd,dhg->bshg", x_in.astype(jnp.float32), params["w_gates"])
+        + params["b_gates"]
+    )
+    ig = gates[..., 0]                      # raw input-gate logit (B,S,H)
+    lf = jax.nn.log_sigmoid(gates[..., 1])  # log forget gate
+    return q, k, v, ig, lf
+
+
+def mlstm_parallel(q, k, v, ig, lf, *, chunk: int = 256):
+    """Stabilized quadratic mLSTM, chunked over queries.
+
+    q,k,v: (B,S,H,D); ig, lf: (B,S,H).  Returns (B,S,H,D).
+    """
+    b, s, h, d = q.shape
+    if s % chunk != 0:
+        chunk = s  # single tile for short/ragged sequences
+    scale = d ** -0.5
+    F = jnp.cumsum(lf, axis=1)  # (B,S,H) cumulative log-forget
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(s)
+
+    n_chunks = max(1, s // chunk)
+    qc = qf.reshape(b, n_chunks, chunk, h, d)
+    Fc = F.reshape(b, n_chunks, chunk, h)
+
+    @jax.checkpoint
+    def one_chunk(args):
+        ci, q_i, F_i = args  # q_i (B,L,H,D), F_i (B,L,H)
+        qpos = ci * chunk + jnp.arange(chunk)
+        # logD_ij = F_i - F_j + lf_j... precisely: F_i - F_j + ig_j, j <= i
+        logD = (
+            F_i[:, :, None] - F[:, None, :, :] + lf[:, None, :, :] + ig[:, None, :, :]
+        )  # (B,L,S,H); note D_ii uses F_i - F_i + lf_i + ig_i? see below
+        # xLSTM defines D_ij = exp(sum_{t=j+1..i} lf_t + ig_j); rewrite:
+        # sum_{t=j+1..i} lf_t = F_i - F_j, so logD = F_i - F_j + ig_j.
+        logD = F_i[:, :, None] - F[:, None, :, :] + ig[:, None, :, :]
+        causal = kpos[None, :] <= qpos[:, None]  # (L,S)
+        logD = jnp.where(causal[None, :, :, None], logD, -jnp.inf)
+        m = jnp.max(logD, axis=2, keepdims=True)          # (B,L,1,H)
+        m = jnp.maximum(m, -1e30)                         # guard all -inf rows
+        dmat = jnp.exp(logD - m)                          # (B,L,S,H)
+        scores = jnp.einsum("blhd,bshd->blsh", q_i, kf) * dmat
+        denom = jnp.maximum(
+            jnp.abs(jnp.sum(scores, axis=2)), jnp.exp(-m[:, :, 0])
+        )  # (B,L,H)
+        out = jnp.einsum("blsh,bshd->blhd", scores, vf) / denom[..., None]
+        return out
+
+    outs = jax.lax.map(
+        one_chunk, (jnp.arange(n_chunks), qc.transpose(1, 0, 2, 3, 4),
+                    Fc.transpose(1, 0, 2, 3))
+    )  # (n_chunks, B, L, H, D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d).astype(q.dtype)
+
+
+def mlstm_forward(cfg, params, x):
+    """x: (B,S,d) -> (B,S,d)."""
+    di, h, hd = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"])
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, ig, lf = _mlstm_qkv_gates(cfg, params, x_in)
+    out = mlstm_parallel(q, k, v, ig, lf)
+    out = _headwise_rms(out, params["o_norm"])
+    out = out.reshape(*out.shape[:2], di) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", out, params["down_proj"])
+
+
+def init_mlstm_cache(cfg, batch: int):
+    di, h, hd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def spec_mlstm_cache(cfg, rules, batch: int):
+    di, h, hd = _mlstm_dims(cfg)
+    ba = rules.batch_axes
+    return {
+        "C": rules.spec(ba, None, rules.model_axis, None, dim_sizes=(batch, h, hd, hd)),
+        "n": rules.spec(ba, None, rules.model_axis, dim_sizes=(batch, h, hd)),
+        "m": rules.spec(ba, None, dim_sizes=(batch, h)),
+    }
+
+
+def mlstm_decode(cfg, params, x, cache):
+    """x: (B,1,d); stabilized recurrent step."""
+    di, h, hd = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"])
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, ig, lf = _mlstm_qkv_gates(cfg, params, x_in)
+    qf = q[:, 0].astype(jnp.float32) * hd ** -0.5  # (B,H,D)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    ig, lf = ig[:, 0], lf[:, 0]                    # (B,H)
+
+    m_new = jnp.maximum(lf + cache["m"], ig)
+    f_sc = jnp.exp(lf + cache["m"] - m_new)[..., None]
+    i_sc = jnp.exp(ig - m_new)[..., None]
+    C = f_sc[..., None] * cache["C"] + i_sc[..., None] * kf[..., None] * vf[..., :, None].transpose(0, 1, 3, 2)
+    # (B,H,Dk,Dv): outer product k x v
+    n = f_sc * cache["n"] + i_sc * kf
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m_new))
+    out = (num / den[..., None]).astype(x.dtype)   # (B,H,Dv)
+    out = _headwise_rms(out, params["o_norm"]).reshape(x.shape[0], 1, di)
+    out = out * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", out, params["down_proj"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ============================== sLSTM ==============================
+def _slstm_dims(cfg):
+    hd = cfg.d_model // cfg.n_heads
+    return cfg.n_heads, hd
+
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    h, hd = _slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        # input weights for 4 gates (i, f, z, o)
+        "w_in": _dense_init(ks[0], (d, 4, h, hd), d, dtype),
+        # block-diagonal recurrent weights per head
+        "r": _dense_init(ks[1], (4, h, hd, hd), hd, jnp.float32),
+        "b": jnp.zeros((4, h, hd), jnp.float32).at[1].set(3.0),  # forget bias
+        "o_norm": jnp.zeros((h, hd), jnp.float32),
+        "up": _dense_init(ks[2], (d, 2 * cfg.d_model), d, dtype),
+        "down": _dense_init(ks[3], (cfg.d_model, d), cfg.d_model, dtype),
+    }
+
+
+def spec_slstm(cfg, rules):
+    d = cfg.d_model
+    h, hd = _slstm_dims(cfg)
+    m, f = rules.model_axis, rules.fsdp
+    return {
+        "w_in": rules.spec(f, None, None, m, dim_sizes=(d, 4, h, hd)),
+        "r": rules.spec(None, None, None, m, dim_sizes=(4, h, hd, hd)),
+        "b": P(None, None, None),
+        "o_norm": P(None, None),
+        "up": rules.spec(f, m, dim_sizes=(d, 2 * d)),
+        "down": rules.spec(m, f, dim_sizes=(d, d)),
+    }
+
+
+def init_slstm_cache(cfg, batch: int):
+    h, hd = _slstm_dims(cfg)
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h, hd), -1e30, jnp.float32)}
+
+
+def spec_slstm_cache(cfg, rules, batch: int):
+    h, hd = _slstm_dims(cfg)
+    s = rules.spec(rules.batch_axes, None, rules.model_axis, dim_sizes=(batch, h, hd))
+    return {"c": s, "n": s, "h": s, "m": s}
+
+
+def _slstm_cell(params, carry, gates_in):
+    """One timestep. gates_in: (B,4,H,D) pre-activations from the input path."""
+    c, n, h_prev, m_prev = carry["c"], carry["n"], carry["h"], carry["m"]
+    rec = jnp.einsum("bhd,ghde->bghe", h_prev, params["r"])  # (B,4,H,D)
+    pre = gates_in.astype(jnp.float32) + rec + params["b"][None]
+    i_t, f_t, z_t, o_t = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+
+    lf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(lf + m_prev, i_t)
+    i_sc = jnp.exp(i_t - m_new)
+    f_sc = jnp.exp(lf + m_prev - m_new)
+    c_new = f_sc * c + i_sc * jnp.tanh(z_t)
+    n_new = f_sc * n + i_sc
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(cfg, params, x, cache=None):
+    """x: (B,S,d) -> (B,S,d). Time-recurrent scan (no parallel form exists)."""
+    b, s, d = x.shape
+    h, hd = _slstm_dims(cfg)
+    gates = jnp.einsum("bsd,dghe->bsghe", x, params["w_in"])  # (B,S,4,H,D)
+    carry = cache if cache is not None else init_slstm_cache(cfg, b)
+
+    def step(carry, g_t):
+        new = _slstm_cell(params, carry, g_t)
+        return new, new["h"]
+
+    carry, hs = jax.lax.scan(step, carry, gates.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3)  # (B,S,H,D)
+    hs = _headwise_rms(hs, params["o_norm"]).reshape(b, s, d)
+
+    up = jnp.einsum("bsd,de->bse", hs.astype(x.dtype), params["up"])
+    a, g = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bsd,de->bse", a * jax.nn.silu(g), params["down"])
+    return out, carry
+
+
+def slstm_decode(cfg, params, x, cache):
+    out, carry = slstm_forward(cfg, params, x, cache)
+    return out, carry

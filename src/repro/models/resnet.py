@@ -1,0 +1,105 @@
+"""ResNet-18 in pure JAX — the paper's Jetson-TX2 FL workload (§5).
+
+GroupNorm replaces BatchNorm: FedAvg over divergent client BN statistics is a
+known failure mode and the paper's system conclusions do not depend on the
+norm choice (DESIGN.md §7).  CIFAR stem (3x3, no max-pool).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .layers.norms import groupnorm
+
+
+def _conv_init(key, shape):  # HWIO
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+
+def conv2d(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _init_norm(c):
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _init_block(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(ks[0], (3, 3, cin, cout)),
+        "n1": _init_norm(cout),
+        "conv2": _conv_init(ks[1], (3, 3, cout, cout)),
+        "n2": _init_norm(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[2], (1, 1, cin, cout))
+        p["proj_n"] = _init_norm(cout)
+    return p
+
+
+def _block(p, x, stride, groups=8):
+    h = conv2d(x, p["conv1"], stride)
+    h = jax.nn.relu(groupnorm(h, p["n1"]["scale"], p["n1"]["bias"], groups))
+    h = conv2d(h, p["conv2"])
+    h = groupnorm(h, p["n2"]["scale"], p["n2"]["bias"], groups)
+    if "proj" in p:
+        x = conv2d(x, p["proj"], stride)
+        x = groupnorm(x, p["proj_n"]["scale"], p["proj_n"]["bias"], groups)
+    return jax.nn.relu(x + h)
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 2 + sum(cfg.stage_sizes))
+    params = {
+        "stem": _conv_init(ks[0], (3, 3, cfg.channels, cfg.stage_widths[0])),
+        "stem_n": _init_norm(cfg.stage_widths[0]),
+        "stages": [],
+        "fc_w": jax.random.normal(
+            ks[1], (cfg.stage_widths[-1], cfg.num_classes), jnp.float32
+        ) / np.sqrt(cfg.stage_widths[-1]),
+        "fc_b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    ki = 2
+    cin = cfg.stage_widths[0]
+    for si, (n, cout) in enumerate(zip(cfg.stage_sizes, cfg.stage_widths)):
+        stage = []
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            stage.append(_init_block(ks[ki], cin, cout, stride))
+            ki += 1
+            cin = cout
+        params["stages"].append(stage)
+    return params
+
+
+def forward(cfg, params, x):
+    """x: (N,H,W,C) -> logits (N,classes)."""
+    h = conv2d(x, params["stem"])
+    h = jax.nn.relu(groupnorm(h, params["stem_n"]["scale"], params["stem_n"]["bias"]))
+    for si, stage in enumerate(params["stages"]):
+        for bi, bp in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = _block(bp, h, stride)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["fc_w"] + params["fc_b"]
+
+
+def loss_fn(cfg, params, batch):
+    logits = forward(cfg, params, batch["x"])
+    labels = batch["y"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"ce": loss, "acc": acc}
+
+
+def param_specs(cfg, params) -> dict:
+    """CNNs are tiny: replicate everything (client axis added by the engine)."""
+    return jax.tree.map(lambda x: P(), params)

@@ -1,0 +1,601 @@
+"""Generic decoder-only stack covering every assigned architecture family.
+
+One block = pre-norm mixer (attention | MLA | mamba | mLSTM | sLSTM)
+[+ pre-norm FFN (dense MLP | MoE) when d_ff > 0].  The layer plan comes from
+``ArchConfig.layer_plan()``; homogeneous plans scan over layers (stacked
+params, small HLO), hybrid plans scan over the repeating *period* with one
+param pytree per position-in-period.
+
+All functions are pure; params/caches are dicts mirrored 1:1 by spec
+functions (PartitionSpec pytrees) used for pjit in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, LayerSpec
+from .layers import attention as attn_lib
+from .layers import mamba as mamba_lib
+from .layers import mla as mla_lib
+from .layers import moe as moe_lib
+from .layers import xlstm as xlstm_lib
+from .layers.embeddings import embed, init_embedding, spec_embedding
+from .layers.mlp import init_mlp, mlp_forward, spec_mlp
+from .layers.norms import apply_norm, init_norm, spec_norm
+
+PyTree = Any
+AUX_KEYS = ("moe_aux", "moe_z", "moe_drop_frac")
+
+# Sequence-parallel residual saves: when set (by launch/specs.py) to a
+# PartitionSpec for the (B, S, d) carry, the layer-scan carry is pinned to it
+# so per-layer remat saves are sharded (Megatron sequence-parallelism at scan
+# boundaries) instead of replicated over the model axis.  None on CPU tests.
+CARRY_SHARDING = None
+
+
+def _pin_carry(x):
+    if CARRY_SHARDING is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, CARRY_SHARDING)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ============================ block ============================
+def init_block(key, cfg: ArchConfig, spec: LayerSpec):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    p: dict = {"norm1": init_norm(cfg, cfg.d_model)}
+    if spec.kind == "attn":
+        p["mixer"] = (
+            mla_lib.init_mla(ks[0], cfg, dt)
+            if cfg.mla is not None
+            else attn_lib.init_attention(ks[0], cfg, dt)
+        )
+    elif spec.kind == "mamba":
+        p["mixer"] = mamba_lib.init_mamba(ks[0], cfg, dt)
+    elif spec.kind == "mlstm":
+        p["mixer"] = xlstm_lib.init_mlstm(ks[0], cfg, dt)
+    elif spec.kind == "slstm":
+        p["mixer"] = xlstm_lib.init_slstm(ks[0], cfg, dt)
+    else:
+        raise ValueError(spec.kind)
+    if cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg, cfg.d_model)
+        p["ffn"] = (
+            moe_lib.init_moe(ks[1], cfg, dt)
+            if spec.moe
+            else init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+        )
+    return p
+
+
+def spec_block(cfg: ArchConfig, spec: LayerSpec, rules):
+    s: dict = {"norm1": spec_norm(cfg)}
+    if spec.kind == "attn":
+        s["mixer"] = (
+            mla_lib.spec_mla(cfg, rules)
+            if cfg.mla is not None
+            else attn_lib.spec_attention(cfg, rules)
+        )
+    elif spec.kind == "mamba":
+        s["mixer"] = mamba_lib.spec_mamba(cfg, rules)
+    elif spec.kind == "mlstm":
+        s["mixer"] = xlstm_lib.spec_mlstm(cfg, rules)
+    elif spec.kind == "slstm":
+        s["mixer"] = xlstm_lib.spec_slstm(cfg, rules)
+    if cfg.d_ff > 0:
+        s["norm2"] = spec_norm(cfg)
+        s["ffn"] = (
+            moe_lib.spec_moe(cfg, rules)
+            if spec.moe
+            else spec_mlp(rules, cfg.d_model, cfg.d_ff)
+        )
+    return s
+
+
+def _zero_aux():
+    return {k: jnp.zeros((), jnp.float32) for k in AUX_KEYS}
+
+
+def block_forward(cfg: ArchConfig, spec: LayerSpec, params, x, *, window=None):
+    """Full-sequence training/prefill pass. Returns (x, aux)."""
+    aux = _zero_aux()
+    h = apply_norm(cfg, params["norm1"], x)
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            h = mla_lib.mla_forward(cfg, params["mixer"], h, window=window)
+        else:
+            h = attn_lib.attention_forward(cfg, params["mixer"], h, window=window)
+        x = x + h
+    elif spec.kind == "mamba":
+        x = x + mamba_lib.mamba_forward(cfg, params["mixer"], h)
+    elif spec.kind == "mlstm":
+        x = x + xlstm_lib.mlstm_forward(cfg, params["mixer"], h)
+    elif spec.kind == "slstm":
+        out, _ = xlstm_lib.slstm_forward(cfg, params["mixer"], h)
+        x = x + out
+    if cfg.d_ff > 0:
+        h = apply_norm(cfg, params["norm2"], x)
+        if spec.moe:
+            out, moe_aux = moe_lib.moe_forward(cfg, params["ffn"], h)
+            aux = {**aux, **{k: aux[k] + moe_aux.get(k, 0.0) for k in AUX_KEYS}}
+        else:
+            out = mlp_forward(params["ffn"], h, cfg.act)
+        x = x + out
+    return x, aux
+
+
+# ---- block caches (decode) ----
+def init_block_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, cache_len: int):
+    dt = _dtype(cfg)
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            return mla_lib.init_mla_cache(cfg, batch, cache_len, dt)
+        return attn_lib.init_kv_cache(cfg, batch, cache_len, dt)
+    if spec.kind == "mamba":
+        return mamba_lib.init_mamba_cache(cfg, batch, dt)
+    if spec.kind == "mlstm":
+        return xlstm_lib.init_mlstm_cache(cfg, batch)
+    if spec.kind == "slstm":
+        return xlstm_lib.init_slstm_cache(cfg, batch)
+    raise ValueError(spec.kind)
+
+
+def spec_block_cache(cfg: ArchConfig, spec: LayerSpec, rules, batch: int, cache_len: int):
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            return mla_lib.spec_mla_cache(cfg, rules, batch, cache_len)
+        return attn_lib.spec_kv_cache(cfg, rules, batch, cache_len)
+    if spec.kind == "mamba":
+        return mamba_lib.spec_mamba_cache(cfg, rules, batch)
+    if spec.kind == "mlstm":
+        return xlstm_lib.spec_mlstm_cache(cfg, rules, batch)
+    if spec.kind == "slstm":
+        return xlstm_lib.spec_slstm_cache(cfg, rules, batch)
+    raise ValueError(spec.kind)
+
+
+def block_decode(cfg: ArchConfig, spec: LayerSpec, params, x, cache, pos, *, ring: bool):
+    """One-token decode. x: (B,1,d). Returns (x, new_cache)."""
+    h = apply_norm(cfg, params["norm1"], x)
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            out, cache = mla_lib.mla_decode(cfg, params["mixer"], h, cache, pos, ring=ring)
+        else:
+            out, cache = attn_lib.attention_decode(cfg, params["mixer"], h, cache, pos, ring=ring)
+    elif spec.kind == "mamba":
+        out, cache = mamba_lib.mamba_decode(cfg, params["mixer"], h, cache)
+    elif spec.kind == "mlstm":
+        out, cache = xlstm_lib.mlstm_decode(cfg, params["mixer"], h, cache)
+    elif spec.kind == "slstm":
+        out, cache = xlstm_lib.slstm_decode(cfg, params["mixer"], h, cache)
+    x = x + out
+    if cfg.d_ff > 0:
+        h = apply_norm(cfg, params["norm2"], x)
+        if spec.moe:
+            out, _ = moe_lib.moe_forward(cfg, params["ffn"], h, capacity_factor=2.0)
+        else:
+            out = mlp_forward(params["ffn"], h, cfg.act)
+        x = x + out
+    return x, cache
+
+
+# ============================ full model ============================
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    params: dict = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": (
+                jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32)
+                / np.sqrt(cfg.d_model)
+            ).astype(dt)
+        }
+    if cfg.frontend_tokens:
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = {
+            "w": (
+                jax.random.normal(keys[2], (fd, cfg.d_model), jnp.float32) / np.sqrt(fd)
+            ).astype(dt)
+        }
+
+    plan = cfg.layer_plan()
+    per_layer = [init_block(keys[3 + i], cfg, plan[i]) for i in range(cfg.n_layers)]
+    if cfg.scan_layers:
+        period = cfg.plan_period
+        blocks = []
+        for pos in range(period):
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0), *per_layer[pos::period]
+            )
+            blocks.append(stacked)
+        params["blocks"] = tuple(blocks)
+    else:
+        params["blocks"] = tuple(per_layer)
+    return params
+
+
+def param_specs(cfg: ArchConfig, rules) -> PyTree:
+    specs: dict = {
+        "embed": spec_embedding(rules, cfg.vocab_size, cfg.d_model),
+        "final_norm": spec_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {
+            "w": rules.spec(rules.fsdp, rules.model_axis,
+                            dim_sizes=(cfg.d_model, cfg.vocab_size))
+        }
+    if cfg.frontend_tokens:
+        fd = cfg.frontend_dim or cfg.d_model
+        specs["frontend_proj"] = {
+            "w": rules.spec(None, rules.fsdp, dim_sizes=(fd, cfg.d_model))
+        }
+    plan = cfg.layer_plan()
+    if cfg.scan_layers:
+        period = cfg.plan_period
+
+        def add_layer_dim(spec_tree):
+            return jax.tree.map(
+                lambda s: P(None, *s), spec_tree,
+                is_leaf=lambda s: isinstance(s, P),
+            )
+
+        specs["blocks"] = tuple(
+            add_layer_dim(spec_block(cfg, plan[pos], rules)) for pos in range(period)
+        )
+    else:
+        specs["blocks"] = tuple(
+            spec_block(cfg, plan[i], rules) for i in range(cfg.n_layers)
+        )
+    return specs
+
+
+def _embed_inputs(cfg: ArchConfig, params, batch):
+    """tokens (+ frontend embeddings) -> (B, S_total, d) residual stream."""
+    x = embed(params["embed"], batch["tokens"])
+    if cfg.frontend_tokens:
+        fe = batch["frontend"].astype(x.dtype)  # (B, F, frontend_dim)
+        fe = jnp.einsum("bfd,de->bfe", fe, params["frontend_proj"]["w"])
+        x = jnp.concatenate([fe, x], axis=1)
+    if cfg.dtype:
+        x = x.astype(_dtype(cfg))
+    return x
+
+
+def _run_stack(cfg: ArchConfig, params, x, *, window=None):
+    """Apply all blocks. Returns (x, aux_sum)."""
+    plan = cfg.layer_plan()
+    aux = _zero_aux()
+    if not cfg.scan_layers:
+        for i, p in enumerate(params["blocks"]):
+            x, a = block_forward(cfg, plan[i], p, x, window=window)
+            aux = {k: aux[k] + a[k] for k in AUX_KEYS}
+        return x, aux
+
+    period = cfg.plan_period
+
+    def period_body(x, layer_params):
+        a_sum = _zero_aux()
+        for pos in range(period):
+            x, a = block_forward(cfg, plan[pos], layer_params[pos], x, window=window)
+            a_sum = {k: a_sum[k] + a[k] for k in AUX_KEYS}
+        return _pin_carry(x), a_sum
+
+    if cfg.remat:
+        period_body = jax.checkpoint(period_body)
+
+    def scan_fn(x, layer_params):
+        return period_body(x, layer_params)
+
+    x, auxs = jax.lax.scan(scan_fn, x, params["blocks"])
+    aux = {k: jnp.sum(auxs[k]) for k in AUX_KEYS}
+    return x, aux
+
+
+def _logits(cfg: ArchConfig, params, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"])
+
+
+def forward(cfg: ArchConfig, params, batch, *, window=None):
+    """Training/prefill forward -> (logits, aux)."""
+    x = _embed_inputs(cfg, params, batch)
+    x, aux = _run_stack(cfg, params, x, window=window)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x), aux
+
+
+# ---------------- losses ----------------
+def cross_entropy(cfg: ArchConfig, params, x_final, labels, *, chunk: int = 0):
+    """Token CE over the final residual stream; labels==-1 are masked.
+
+    chunk > 0 computes logits sequence-chunkwise under checkpoint so the full
+    (B,S,V) logits tensor is never materialized (big-vocab memory saver).
+    """
+    b, s, _ = x_final.shape
+
+    def ce_of(xc, yc):
+        logits = _logits(cfg, params, xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(yc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (yc >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    if chunk and s % chunk == 0 and s > chunk:
+        xs = x_final.reshape(b, s // chunk, chunk, -1).transpose(1, 0, 2, 3)
+        ys = labels.reshape(b, s // chunk, chunk).transpose(1, 0, 2)
+        losses, counts = jax.lax.map(jax.checkpoint(lambda a: ce_of(*a)), (xs, ys))
+        total, n = jnp.sum(losses), jnp.sum(counts)
+    else:
+        total, n = ce_of(x_final, labels)
+    return total / jnp.maximum(n, 1.0)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, ce_chunk: int = 0):
+    """FL-client local loss: CE + MoE aux. Returns (loss, metrics)."""
+    x = _embed_inputs(cfg, params, batch)
+    x, aux = _run_stack(cfg, params, x)
+    x = apply_norm(cfg, params["final_norm"], x)
+
+    labels = batch["labels"]
+    if cfg.frontend_tokens:
+        pad = jnp.full((labels.shape[0], cfg.frontend_tokens), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+
+    ce = cross_entropy(cfg, params, x, labels, chunk=ce_chunk)
+    loss = ce
+    if cfg.moe is not None:
+        loss = loss + moe_lib.moe_loss(aux, cfg)
+    metrics = {"ce": ce, **aux}
+    return loss, metrics
+
+
+# ---------------- prefill / decode ----------------
+def _ring(cfg: ArchConfig, shape_seq_len: int) -> tuple[bool, int]:
+    """(use ring buffer?, cache_len) for a given context length."""
+    win = cfg.sliding_window
+    if win is None and shape_seq_len > 65_536:
+        win = cfg.long_context_window  # SWA variant for long_500k (DESIGN.md §5)
+    if win is not None and win < shape_seq_len:
+        return True, win
+    return False, shape_seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, context_len: int):
+    ring, cache_len = _ring(cfg, context_len)
+    plan = cfg.layer_plan()
+    if not cfg.scan_layers:
+        caches = tuple(
+            init_block_cache(cfg, plan[i], batch, cache_len)
+            for i in range(cfg.n_layers)
+        )
+    else:
+        period = cfg.plan_period
+        caches = tuple(
+            jax.tree.map(
+                lambda *xs: jnp.stack(xs, 0),
+                *[
+                    init_block_cache(cfg, plan[pos], batch, cache_len)
+                    for _ in range(cfg.n_layers // period)
+                ],
+            )
+            for pos in range(period)
+        )
+    return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig, rules, batch: int, context_len: int):
+    ring, cache_len = _ring(cfg, context_len)
+    plan = cfg.layer_plan()
+    if not cfg.scan_layers:
+        caches = tuple(
+            spec_block_cache(cfg, plan[i], rules, batch, cache_len)
+            for i in range(cfg.n_layers)
+        )
+    else:
+        period = cfg.plan_period
+
+        def add_layer_dim(spec_tree):
+            return jax.tree.map(
+                lambda s: P(None, *s), spec_tree,
+                is_leaf=lambda s: isinstance(s, P),
+            )
+
+        caches = tuple(
+            add_layer_dim(spec_block_cache(cfg, plan[pos], rules, batch, cache_len))
+            for pos in range(period)
+        )
+    return {"layers": caches, "pos": P()}
+
+
+def decode_step(cfg: ArchConfig, params, batch, cache, *, context_len: int):
+    """One-token decode: batch {"tokens": (B,1)} -> (logits (B,1,V), cache)."""
+    ring, _ = _ring(cfg, context_len)
+    pos = cache["pos"]
+    x = embed(params["embed"], batch["tokens"]).astype(_dtype(cfg))
+    plan = cfg.layer_plan()
+
+    if not cfg.scan_layers:
+        new_caches = []
+        for i, p in enumerate(params["blocks"]):
+            x, c = block_decode(cfg, plan[i], p, x, cache["layers"][i], pos, ring=ring)
+            new_caches.append(c)
+        new_caches = tuple(new_caches)
+    else:
+        period = cfg.plan_period
+
+        def scan_fn(x, xs):
+            layer_params, layer_cache = xs
+            new_cache = []
+            for pp in range(period):
+                x, c = block_decode(
+                    cfg, plan[pp], layer_params[pp], x, layer_cache[pp], pos, ring=ring
+                )
+                new_cache.append(c)
+            return x, tuple(new_cache)
+
+        x, new_caches = jax.lax.scan(
+            scan_fn, x, (params["blocks"], cache["layers"])
+        )
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _logits(cfg, params, x)
+    return logits, {"layers": new_caches, "pos": pos + 1}
+
+
+def prefill(cfg: ArchConfig, params, batch, *, context_len: int):
+    """Prefill: full forward + cache construction. Returns (logits, cache)."""
+    ring, cache_len = _ring(cfg, context_len)
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    plan = cfg.layer_plan()
+
+    def mixer_prefill(spec, p, h, pos0):
+        """Returns (mixer_out, cache) for one block, full-sequence."""
+        if spec.kind == "attn":
+            if cfg.mla is not None:
+                out = mla_lib.mla_forward(cfg, p["mixer"], h)
+                cache = _mla_prefill_cache(cfg, p["mixer"], h, cache_len, ring)
+            else:
+                out = attn_lib.attention_forward(cfg, p["mixer"], h)
+                cache = _attn_prefill_cache(cfg, p["mixer"], h, cache_len, ring)
+            return out, cache
+        if spec.kind == "mamba":
+            out, cache = _mamba_prefill(cfg, p["mixer"], h)
+            return out, cache
+        if spec.kind == "mlstm":
+            return xlstm_lib_prefill_mlstm(cfg, p["mixer"], h)
+        if spec.kind == "slstm":
+            out, carry = xlstm_lib.slstm_forward(cfg, p["mixer"], h)
+            return out, carry
+        raise ValueError(spec.kind)
+
+    def one_block(spec, p, x):
+        h = apply_norm(cfg, p["norm1"], x)
+        out, cache = mixer_prefill(spec, p, h, 0)
+        x = x + out
+        if cfg.d_ff > 0:
+            h = apply_norm(cfg, p["norm2"], x)
+            if spec.moe:
+                out, _ = moe_lib.moe_forward(cfg, p["ffn"], h)
+            else:
+                out = mlp_forward(p["ffn"], h, cfg.act)
+            x = x + out
+        return x, cache
+
+    if not cfg.scan_layers:
+        caches = []
+        for i, p in enumerate(params["blocks"]):
+            x, c = one_block(plan[i], p, x)
+            caches.append(c)
+        caches = tuple(caches)
+    else:
+        period = cfg.plan_period
+
+        def scan_fn(x, layer_params):
+            cs = []
+            for pp in range(period):
+                x, c = one_block(plan[pp], layer_params[pp], x)
+                cs.append(c)
+            return _pin_carry(x), tuple(cs)
+
+        if cfg.remat:
+            scan_fn = jax.checkpoint(scan_fn)
+        x, caches = jax.lax.scan(scan_fn, x, params["blocks"])
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _logits(cfg, params, x[:, -1:])  # next-token logits only
+    return logits, {"layers": caches, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def _ring_arrange(full, cache_len: int, ring: bool):
+    """full: (B,S,...) per-position tensor -> cache layout (B,cache_len,...)."""
+    s = full.shape[1]
+    if not ring or s <= cache_len:
+        if s == cache_len:
+            return full
+        pad = [(0, 0)] * full.ndim
+        pad[1] = (0, cache_len - s)
+        return jnp.pad(full, pad)
+    last = full[:, s - cache_len :]
+    # absolute positions s-cache_len .. s-1 -> slot = pos % cache_len
+    slots = (jnp.arange(s - cache_len, s)) % cache_len
+    inv = jnp.argsort(slots)
+    return last[:, inv]
+
+
+def _attn_prefill_cache(cfg, p, h, cache_len, ring):
+    b, s, _ = h.shape
+    positions = jnp.arange(s)[None, :]
+    _, k, v = attn_lib._project_qkv(cfg, p, h, positions)
+    return {"k": _ring_arrange(k, cache_len, ring), "v": _ring_arrange(v, cache_len, ring)}
+
+
+def _mla_prefill_cache(cfg, p, h, cache_len, ring):
+    b, s, _ = h.shape
+    positions = jnp.arange(s)[None, :]
+    _, _, c_kv, k_rope = mla_lib._latents(cfg, p, h, positions)
+    return {
+        "c_kv": _ring_arrange(c_kv, cache_len, ring),
+        "k_rope": _ring_arrange(k_rope, cache_len, ring),
+    }
+
+
+def _mamba_prefill(cfg, p, u):
+    """Mamba forward that also returns the final (conv, ssm) state."""
+    from repro.kernels import ops
+
+    di, dtr, n, dc = mamba_lib._dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    xraw, z = jnp.split(xz, 2, axis=-1)
+    x_pad = jnp.pad(xraw, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(
+        x_pad[:, i : i + xraw.shape[1]] * p["conv_w"][i][None, None] for i in range(dc)
+    ) + p["conv_b"].astype(xraw.dtype)
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm = mamba_lib._ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ops.selective_scan(xc, dt, A, Bm, Cm, p["D"])
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    conv_state = x_pad[:, x_pad.shape[1] - (dc - 1) :]
+    return out, {"conv": conv_state, "ssm": final_state}
+
+
+def xlstm_lib_prefill_mlstm(cfg, p, h):
+    """mLSTM forward + final (C, n, m) state for decode continuation."""
+    di, nh, hd = xlstm_lib._mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", h, p["up_proj"])
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, ig, lf = xlstm_lib._mlstm_qkv_gates(cfg, p, x_in)
+    out = xlstm_lib.mlstm_parallel(q, k, v, ig, lf)
+    out = xlstm_lib._headwise_rms(out, p["o_norm"])
+    out = out.reshape(*out.shape[:2], di) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", out, p["down_proj"])
+
+    # final state: C_S = sum_j exp(F_S - F_j + ig_j - m) k_j v_j^T
+    F = jnp.cumsum(lf, axis=1)                      # (B,S,H)
+    w_log = F[:, -1:, :] - F + ig                    # (B,S,H)
+    m = jnp.max(w_log, axis=1)                       # (B,H)
+    w = jnp.exp(w_log - m[:, None])                  # (B,S,H)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = jnp.einsum("bsh,bshk,bshv->bhkv", w, kf, vf)
+    n = jnp.einsum("bsh,bshk->bhk", w, kf)
+    return out, {"C": C, "n": n, "m": m}

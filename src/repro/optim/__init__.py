@@ -1,0 +1,14 @@
+from .base import Optimizer, Schedule, chain_clip_by_global_norm, constant_schedule
+from .sgd import sgd
+from .adam import adam, adamw, yogi
+
+__all__ = [
+    "Optimizer",
+    "Schedule",
+    "chain_clip_by_global_norm",
+    "constant_schedule",
+    "sgd",
+    "adam",
+    "adamw",
+    "yogi",
+]

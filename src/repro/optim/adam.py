@@ -1,0 +1,90 @@
+"""Adam / AdamW — used as *server* optimizers (FedAdam/FedYogi) and available
+as a client optimizer for small models."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, constant_schedule
+
+
+def adam(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    schedule = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, params, state, step):
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = schedule(step)
+        bc1 = 1.0 - b1 ** step
+        bc2 = 1.0 - b2 ** step
+
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(state_dtype), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(state_dtype)),
+            state["v"],
+            grads,
+        )
+
+        def step_fn(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(state_dtype)
+            return (p.astype(state_dtype) - lr_t * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(step_fn, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def yogi(lr, b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3) -> Optimizer:
+    """Yogi second-moment update (additive, sign-controlled) — FedYogi server opt."""
+    schedule = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.full(p.shape, 1e-6, jnp.float32), params),
+        }
+
+    def update(grads, params, state, step):
+        lr_t = schedule(step)
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+
+        def v_fn(v_, g):
+            g2 = jnp.square(g.astype(jnp.float32))
+            return v_ - (1 - b2) * jnp.sign(v_ - g2) * g2
+
+        v = jax.tree.map(v_fn, state["v"], grads)
+        new_params = jax.tree.map(
+            lambda p, m_, v_: (
+                p.astype(jnp.float32) - lr_t * m_ / (jnp.sqrt(v_) + eps)
+            ).astype(p.dtype),
+            params,
+            m,
+            v,
+        )
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)

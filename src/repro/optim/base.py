@@ -1,0 +1,66 @@
+"""Minimal optax-style optimizer core (optax is not installed offline).
+
+An ``Optimizer`` is an (init, update) pair over pytrees.  ``update`` returns
+(new_params, new_state) directly — FL clients apply updates in-graph inside
+``lax.scan`` so the fused form avoids an extra tree_map.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, Any], tuple[PyTree, PyTree]]
+    # update(grads, params, state, step) -> (new_params, new_state)
+
+
+def chain_clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+
+    def update(grads, params, state, step):
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        return opt.update(grads, params, state, step)
+
+    return Optimizer(opt.init, update)
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Piecewise schedule: linear warmup then cosine decay to `final_frac`."""
+
+    base_lr: float
+    warmup_steps: int = 0
+    decay_steps: int = 0
+    final_frac: float = 0.1
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(1, self.warmup_steps))
+        if self.decay_steps:
+            prog = jnp.clip(
+                (step - self.warmup_steps) / jnp.maximum(1, self.decay_steps), 0.0, 1.0
+            )
+            cos = self.final_frac + (1 - self.final_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * prog)
+            )
+        else:
+            cos = 1.0
+        return self.base_lr * warm * cos
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

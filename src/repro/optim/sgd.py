@@ -1,0 +1,53 @@
+"""SGD (+momentum, +weight decay) — the paper's on-device client optimizer.
+
+Plain SGD keeps per-client optimizer state tiny (zero for momentum=0), which
+is what makes client-parallel FL of multi-billion-parameter models feasible:
+memory = params + grads only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, constant_schedule
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    schedule = lr if callable(lr) else constant_schedule(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, params, state, step):
+        lr_t = schedule(step)
+
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params
+            )
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: p - (lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params,
+                grads,
+            )
+            return new_params, state
+
+        new_state = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(m.dtype), state, grads
+        )
+        step_dir = (
+            jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype), new_state, grads)
+            if nesterov
+            else new_state
+        )
+        new_params = jax.tree.map(
+            lambda p, d: p - (lr_t * d.astype(jnp.float32)).astype(p.dtype),
+            params,
+            step_dir,
+        )
+        return new_params, new_state
+
+    return Optimizer(init, update)

@@ -1,0 +1,105 @@
+"""HLO-text analysis: collective-traffic extraction for the roofline report.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse the (stable)HLO text and sum operand sizes of every
+communication op.  This is the "profiler" of the CPU-only dry-run environment.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+# op name -> traffic multiplier heuristic. For a ring algorithm an all-gather
+# of output size S moves ~S*(n-1)/n per link; we report *operand/result bytes*
+# (the canonical "collective bytes" that roofline term divides by link bw) and
+# leave algorithmic factors to the analysis text.
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g. "bf16[256,4096,512]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Aggregate collective traffic of one compiled executable."""
+
+    bytes_by_op: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    count_by_op: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    instances: list[tuple[str, int, str]] = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    def summary(self) -> str:
+        lines = [f"collective traffic: {self.total_bytes/1e9:.3f} GB total"]
+        for op in sorted(self.bytes_by_op, key=self.bytes_by_op.get, reverse=True):
+            lines.append(
+                f"  {op:<22} x{self.count_by_op[op]:<4} {self.bytes_by_op[op]/1e9:.3f} GB"
+            )
+        return "\n".join(lines)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective instruction in HLO text.
+
+    We parse the *result* shape on the lhs of `= <shape> op-name(...)` lines;
+    for fusion-wrapped collectives XLA keeps the collective op visible at the
+    module level, so a line scan is sufficient in practice.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+([a-z\-]+)", stripped)
+        if not m:
+            continue
+        opname = m.group(2)
+        matched = None
+        for coll in COLLECTIVE_OPS:
+            if opname == coll or opname.startswith(coll + "-start") or opname == coll + "-done":
+                matched = coll
+                break
+        if matched is None:
+            continue
+        if opname.endswith("-done"):
+            continue  # counted at -start
+        nbytes = shape_bytes(m.group(1))
+        stats.bytes_by_op[matched] += nbytes
+        stats.count_by_op[matched] += 1
+        stats.instances.append((matched, nbytes, stripped[:160]))
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"=\s*[^=]*\b{re.escape(opname)}\(", hlo_text))

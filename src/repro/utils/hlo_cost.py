@@ -1,0 +1,284 @@
+"""HLO-text cost analyzer — the dry-run 'profiler'.
+
+``compiled.cost_analysis()`` counts each computation ONCE, so anything inside
+a ``while`` loop (every ``lax.scan``: the layer stack, local-step loop, CE
+chunking) is undercounted by its trip count.  This analyzer parses the
+partitioned, scheduled HLO text, builds per-computation symbol tables
+(operands are referenced by name in scheduled HLO), extracts scan trip
+counts from loop conditions, and accumulates through the call graph:
+
+- dot FLOPs        2 * numel(out) * prod(contracted dims) — the MXU work;
+- HBM bytes        operand + result bytes of every materializing top-level
+                   instruction (post-fusion boundaries = HBM traffic model);
+- collective bytes by op kind, with loop multipliers.
+
+All quantities are PER-DEVICE (the text is the partitioned module).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]{1,12})\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(
+    r"^(?:\((?:[^()]|\([^()]*\))*\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\("
+)
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id",
+    "get-dimension-size", "iota", "copy-start", "copy-done",
+}
+
+
+def _shapes_of(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _nbytes(shapes: list[tuple[str, list[int]]]) -> float:
+    total = 0.0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    opcode: str
+    result_shapes: list          # [(dtype, dims)]
+    operands: list[str]          # referenced instruction names
+    attrs: str                   # full body text
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)  # name -> result_shapes
+    max_const: float = 1.0
+
+
+def _split_result_and_rest(body: str) -> tuple[str, str]:
+    """body starts with the result shape (maybe a tuple); split it off."""
+    if body.startswith("("):
+        depth = 0
+        for i, ch in enumerate(body):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                return body[: i + 1], body[i + 1 :]
+    m = re.match(r"[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?", body)
+    if m:
+        return m.group(0), body[m.end():]
+    return "", body
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Names inside the first top-level parenthesized operand list."""
+    start = rest.find("(")
+    if start < 0:
+        return []
+    depth, end = 0, len(rest)
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            end = i
+            break
+    return re.findall(r"%([\w\.\-]+)", rest[start:end])
+
+
+def parse_module(hlo_text: str):
+    comps: dict[str, _Comp] = {}
+    entry_name = None
+    cur: _Comp | None = None
+
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", line)
+            if m:
+                cur = _Comp(name=m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        if line == "}":
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, body = mi.group(1), mi.group(2)
+        res_text, rest = _split_result_and_rest(body)
+        mo = re.match(r"\s*([\w\-]+)\(", rest)
+        opcode = mo.group(1) if mo else ""
+        shapes = _shapes_of(res_text)
+        instr = _Instr(
+            name=name, opcode=opcode, result_shapes=shapes,
+            operands=_operand_names(rest), attrs=rest,
+        )
+        cur.instrs.append(instr)
+        cur.symbols[name] = shapes
+        for c in re.findall(r"\bconstant\((\d+)\)", body):
+            cur.max_const = max(cur.max_const, float(c))
+
+    return comps, entry_name
+
+
+@dataclass
+class ModuleCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def coll_summary(self) -> str:
+        total = self.collective_bytes
+        lines = [f"collective traffic (per-device): {total/1e9:.3f} GB"]
+        for op in sorted(self.coll_bytes, key=self.coll_bytes.get, reverse=True):
+            lines.append(
+                f"  {op:<22} x{int(self.coll_count[op]):<6} {self.coll_bytes[op]/1e9:.3f} GB"
+            )
+        return "\n".join(lines)
+
+    def add(self, other: "ModuleCost", mult: float = 1.0, bytes_too: bool = True):
+        self.flops += mult * other.flops
+        if bytes_too:
+            self.bytes += mult * other.bytes
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += mult * v
+            self.coll_count[k] += mult * other.coll_count[k]
+
+
+def _dot_flops(instr: _Instr, symbols: dict) -> float:
+    numel_out = 1
+    for _, dims in instr.result_shapes:
+        for d in dims:
+            numel_out *= d
+    lhs_shapes = symbols.get(instr.operands[0]) if instr.operands else None
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    if m and m.group(1) and lhs_shapes:
+        lhs_dims = lhs_shapes[0][1]
+        for ax in m.group(1).split(","):
+            ax = int(ax)
+            if ax < len(lhs_dims):
+                contract *= lhs_dims[ax]
+    return 2.0 * numel_out * contract
+
+
+def analyze_hlo(hlo_text: str) -> ModuleCost:
+    comps, entry_name = parse_module(hlo_text)
+    memo: dict[str, ModuleCost] = {}
+
+    def cost_of(comp_name: str, depth: int = 0) -> ModuleCost:
+        if comp_name in memo:
+            return memo[comp_name]
+        mc = ModuleCost()
+        comp = comps.get(comp_name)
+        if comp is None or depth > 128:
+            return mc
+        memo[comp_name] = mc
+
+        for instr in comp.instrs:
+            op = instr.opcode
+            if op == "dot":
+                mc.flops += _dot_flops(instr, comp.symbols)
+
+            coll = None
+            for kind in COLLECTIVE_KINDS:
+                if op == kind or op == kind + "-start":
+                    coll = kind
+                    break
+            if op.endswith("-done"):
+                continue
+            if coll:
+                nb = _nbytes(instr.result_shapes)
+                mc.coll_bytes[coll] += nb
+                mc.coll_count[coll] += 1
+                mc.bytes += nb
+                continue
+
+            if op == "while":
+                mw = re.search(
+                    r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", instr.attrs
+                )
+                if mw:
+                    cond, body = mw.group(1), mw.group(2)
+                    trip = max(1.0, comps[cond].max_const if cond in comps else 1.0)
+                    mc.add(cost_of(body, depth + 1), mult=trip)
+                continue
+
+            if op in ("fusion",):
+                mcall = re.search(r"calls=%?([\w\.\-]+)", instr.attrs)
+                if mcall:
+                    mc.add(cost_of(mcall.group(1), depth + 1), bytes_too=False)
+            elif op in ("call", "custom-call", "map", "reduce", "reduce-window",
+                        "sort", "scatter", "select-and-scatter"):
+                for mcall in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", instr.attrs):
+                    mc.add(cost_of(mcall.group(1), depth + 1), bytes_too=False)
+            elif op == "conditional":
+                branches = re.findall(
+                    r"(?:true_computation|false_computation)=%?([\w\.\-]+)", instr.attrs
+                )
+                mb = re.search(r"branch_computations=\{([^}]*)\}", instr.attrs)
+                if mb:
+                    branches += re.findall(r"%?([\w\.\-]+)", mb.group(1))
+                for brname in branches:
+                    mc.add(cost_of(brname, depth + 1))
+
+            if op in _SKIP_BYTES_OPS or not op:
+                continue
+            # HBM traffic model: result + operand bytes of materializing instrs
+            res_b = _nbytes(instr.result_shapes)
+            opnd_b = [
+                _nbytes(comp.symbols.get(opnd, [])) for opnd in instr.operands
+            ]
+            lname = instr.name.lower()
+            if op == "dynamic-update-slice" or (
+                op == "fusion" and "dynamic-update-slice" in lname
+            ):
+                # in-place slice update: traffic = 2 x update region, not the
+                # whole buffer (XLA fuses DUS in place)
+                nb = 2.0 * sum(b for b in opnd_b if b < res_b)
+            elif op == "dynamic-slice" or (
+                op == "fusion" and "dynamic-slice" in lname
+            ):
+                nb = 2.0 * res_b
+            else:
+                nb = res_b + sum(opnd_b)
+            mc.bytes += nb
+
+        return mc
+
+    return cost_of(entry_name or "")

@@ -1,0 +1,137 @@
+"""Pytree utilities shared across the framework.
+
+The FL engine treats model parameters as arbitrary pytrees; everything here is
+pure-functional and jit-compatible unless noted.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x: PyTree, y: PyTree) -> PyTree:
+    """a * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_lerp(a: PyTree, b: PyTree, t) -> PyTree:
+    """(1 - t) * a + t * b, leafwise (t may be a traced scalar)."""
+    return jax.tree.map(lambda ai, bi: ai + t * (bi - ai), a, b)
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    parts = jax.tree.leaves(
+        jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    )
+    return jnp.sum(jnp.stack(parts))
+
+
+def tree_sq_norm(tree: PyTree):
+    return tree_dot(tree, tree)
+
+
+def tree_norm(tree: PyTree):
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar elements (static)."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_where(mask, a: PyTree, b: PyTree) -> PyTree:
+    """Select a (mask true) or b leafwise; mask is a scalar/broadcastable bool."""
+    return jax.tree.map(lambda x, y: jnp.where(mask, x, y), a, b)
+
+
+def tree_stack(trees: list[PyTree]) -> PyTree:
+    """Stack a list of identically-structured pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: PyTree, n: int) -> list[PyTree]:
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_flatten_to_vector(tree: PyTree) -> jnp.ndarray:
+    """Concatenate every leaf (flattened, fp32) into one 1-D vector.
+
+    Used by the aggregation/compression paths that operate on flat updates.
+    """
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([x.astype(jnp.float32).reshape(-1) for x in leaves])
+
+
+def tree_unflatten_from_vector(vec: jnp.ndarray, like: PyTree) -> PyTree:
+    """Inverse of :func:`tree_flatten_to_vector` against a template pytree."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        out.append(vec[off : off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_map_with_path_filter(
+    fn: Callable, tree: PyTree, predicate: Callable[[tuple, Any], bool]
+) -> PyTree:
+    """Apply fn to leaves where predicate(path, leaf) holds; identity otherwise."""
+
+    def _apply(path, leaf):
+        return fn(leaf) if predicate(path, leaf) else leaf
+
+    return jax.tree_util.tree_map_with_path(_apply, tree)
+
+
+def tree_paths(tree: PyTree) -> list[str]:
+    """Human-readable path strings for every leaf (for masks / logging)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def tree_mask_like(tree: PyTree, predicate: Callable[[str], bool]) -> PyTree:
+    """Boolean mask pytree: True where predicate(path_string)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    vals = [bool(predicate(jax.tree_util.keystr(p))) for p, _ in flat]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_partition_apply(update_fn, params: PyTree, mask: PyTree) -> PyTree:
+    """Apply update_fn only to leaves where mask (a bool pytree) is True.
+
+    This realizes the paper's frozen-base/trainable-head split (§4.1): the FL
+    client updates head leaves and passes base leaves through untouched.
+    """
+    return jax.tree.map(
+        lambda p, m: update_fn(p) if m else p, params, mask
+    )

@@ -1,0 +1,159 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.fedavg_reduce import fedavg_reduce
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quantize import dequantize_int8, quantize_int8
+from repro.kernels.selective_scan import selective_scan
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kv,d,window",
+    [
+        (1, 128, 4, 4, 64, None),      # MHA
+        (2, 256, 8, 2, 64, None),      # GQA 4:1
+        (1, 256, 4, 1, 128, None),     # MQA
+        (2, 256, 4, 4, 64, 64),        # sliding window
+        (1, 384, 6, 3, 32, 128),       # non-pow2 heads, window
+    ],
+)
+def test_flash_attention_matches_oracle(b, s, h, kv, d, window, dtype):
+    q = _randn((b, s, h, d), dtype)
+    k = _randn((b, s, kv, d), dtype)
+    v = _randn((b, s, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    exp = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,d", [(2, 256, 8, 4, 64), (1, 128, 4, 1, 128)])
+def test_decode_attention_matches_oracle(b, s, h, kv, d, dtype):
+    q = _randn((b, h, d), dtype)
+    k = _randn((b, s, kv, d), dtype)
+    v = _randn((b, s, kv, d), dtype)
+    valid = jnp.asarray(RNG.random((b, s)) > 0.25)
+    valid = valid.at[:, 0].set(True)  # at least one valid slot
+    out = decode_attention(q, k, v, kv_valid=valid, interpret=True)
+    exp = ref.decode_attention(q, k, v, kv_valid=valid)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("b,s,di,n,bd,chunk", [
+    (1, 128, 64, 16, 32, 64),
+    (2, 256, 128, 8, 128, 128),
+])
+def test_selective_scan_matches_oracle(b, s, di, n, bd, chunk):
+    x = _randn((b, s, di), scale=0.5)
+    dt = jax.nn.softplus(_randn((b, s, di)))
+    A = -jnp.exp(_randn((di, n), scale=0.3))
+    Bm = _randn((b, s, n))
+    Cm = _randn((b, s, n))
+    D = _randn((di,))
+    y1, h1 = selective_scan(x, dt, A, Bm, Cm, D, interpret=True, bd=bd, chunk=chunk)
+    y2, h2 = ref.selective_scan(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4, rtol=2e-4)
+
+
+def test_selective_scan_matches_stepwise_recurrence():
+    """The parallel scan equals the literal per-token recurrence."""
+    b, s, di, n = 1, 64, 32, 8
+    x = _randn((b, s, di), scale=0.5)
+    dt = jax.nn.softplus(_randn((b, s, di)))
+    A = -jnp.exp(_randn((di, n), scale=0.3))
+    Bm, Cm, D = _randn((b, s, n)), _randn((b, s, n)), _randn((di,))
+    y_par, h_par = ref.selective_scan(x, dt, A, Bm, Cm, D)
+    h = jnp.zeros((b, di, n))
+    ys = []
+    for t in range(s):
+        y, h = ref.selective_scan_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D, h)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_par), np.stack(ys, 1), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h), atol=2e-5, rtol=2e-5)
+
+
+def test_selective_scan_init_state_continuation():
+    """scan(x[0:s]) == scan(x[0:m]) then scan(x[m:s], init_state)."""
+    b, s, m_, di, n = 1, 128, 64, 32, 8
+    x = _randn((b, s, di), scale=0.5)
+    dt = jax.nn.softplus(_randn((b, s, di)))
+    A = -jnp.exp(_randn((di, n), scale=0.3))
+    Bm, Cm, D = _randn((b, s, n)), _randn((b, s, n)), _randn((di,))
+    y_full, h_full = ref.selective_scan(x, dt, A, Bm, Cm, D)
+    _, h1 = ref.selective_scan(x[:, :m_], dt[:, :m_], A, Bm[:, :m_], Cm[:, :m_], D)
+    y2, h2 = ref.selective_scan(
+        x[:, m_:], dt[:, m_:], A, Bm[:, m_:], Cm[:, m_:], D, init_state=h1
+    )
+    np.testing.assert_allclose(np.asarray(y_full[:, m_:]), np.asarray(y2), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("c,n,bn", [(4, 8192, 4096), (16, 16384, 8192), (3, 4096, 4096)])
+def test_fedavg_reduce_matches_oracle(c, n, bn):
+    u = _randn((c, n))
+    w = jnp.asarray(RNG.random(c) + 0.1, jnp.float32)
+    out = fedavg_reduce(u, w, interpret=True, bn=bn)
+    exp = ref.fedavg_reduce(u, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    c=st.integers(2, 8),
+    scale=st.floats(0.1, 10.0),
+)
+def test_fedavg_reduce_weight_scale_invariance(c, scale):
+    """Scaling all weights by a constant must not change the mean."""
+    rng = np.random.default_rng(c)
+    u = jnp.asarray(rng.normal(size=(c, 2048)), jnp.float32)
+    w = jnp.asarray(rng.random(c) + 0.5, jnp.float32)
+    a = fedavg_reduce(u, w, interpret=True, bn=2048)
+    b = fedavg_reduce(u, w * scale, interpret=True, bn=2048)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+def test_quantize_roundtrip_matches_oracle():
+    x = _randn((8192,))
+    q, s = quantize_int8(x, interpret=True, bn=4096)
+    qr, sr = ref.quantize_int8(x)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = dequantize_int8(q, s, interpret=True, bn=4096)
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(ref.dequantize_int8(qr, sr)), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+def test_quantize_error_bound(seed, scale):
+    """|x - dequant(quant(x))| <= blockwise scale (= absmax/127) per entry."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1024,)) * scale, jnp.float32)
+    q, s = ref.quantize_int8(x, block=256)
+    xd = ref.dequantize_int8(q, s, block=256)
+    err = np.abs(np.asarray(x - xd)).reshape(-1, 256)
+    bound = np.asarray(s)[:, None] * 0.5 + 1e-9
+    assert (err <= bound + 1e-6).all()

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (required deliverable (f)).
+
+For each assigned architecture: instantiate the REDUCED same-family variant
+(2 layers, d_model<=512, <=4 experts), run one forward/train step and one
+prefill+decode step on CPU, asserting output shapes and finiteness.  Also
+checks decode-vs-prefill logit parity (the cache path equals the full pass).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_configs
+from repro.models import build_model
+
+ASSIGNED = [
+    "mixtral-8x7b",
+    "jamba-1.5-large-398b",
+    "xlstm-1.3b",
+    "stablelm-3b",
+    "granite-8b",
+    "paligemma-3b",
+    "qwen3-0.6b",
+    "minicpm3-4b",
+    "musicgen-medium",
+    "deepseek-moe-16b",
+]
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32),
+    }
+    if cfg.frontend_tokens:
+        fd = cfg.frontend_dim or cfg.d_model
+        batch["frontend"] = rng.normal(size=(b, cfg.frontend_tokens, fd)).astype(np.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    batch = _batch(cfg)
+
+    def step(p, b):
+        (loss, metrics), grads = jax.value_and_grad(m.loss_fn, has_aux=True)(p, b)
+        new_p = jax.tree.map(lambda x, g: x - 0.01 * g.astype(x.dtype), p, grads)
+        return loss, metrics, new_p
+
+    loss, metrics, new_p = jax.jit(step)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+    for leaf in jax.tree.leaves(new_p):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_prefill_decode_shapes(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    b, s, ctx = 2, 16, 64
+    batch = _batch(cfg, b=b, s=s)
+    del batch["labels"]
+    logits, cache = jax.jit(lambda p, bt: m.prefill(p, bt, ctx))(params, batch)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache = jax.jit(lambda p, bt, c: m.decode_step(p, bt, c, ctx))(
+        params, {"tokens": tok}, cache
+    )
+    assert logits2.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    assert int(cache["pos"]) == s + cfg.frontend_tokens + 1
+
+
+# MoE archs (mixtral/jamba/deepseek) are excluded: capacity-based token
+# dropping depends on the prefill length (capacity = ceil(S*k*cf/E)), so
+# prefill(S) vs prefill(S-1)+decode legitimately differ on dropped tokens.
+# Frontend-stub archs (paligemma/musicgen) are covered by the shape smoke
+# tests; strict parity would need the conditioning prefix re-threaded.
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "granite-8b", "minicpm3-4b", "xlstm-1.3b", "stablelm-3b"])
+def test_decode_matches_prefill_logits(arch):
+    """prefill(t[0:s]) then decode(t[s]) == prefill(t[0:s+1]) last logits."""
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    b, s, ctx = 1, 17, 64
+    toks = rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
+
+    logits_full, _ = m.prefill(params, {"tokens": toks}, ctx)
+    _, cache = m.prefill(params, {"tokens": toks[:, :-1]}, ctx)
+    logits_step, _ = m.decode_step(params, {"tokens": toks[:, -1:]}, cache, ctx)
+    np.testing.assert_allclose(
+        np.asarray(logits_full[:, -1], np.float32),
+        np.asarray(logits_step[:, -1], np.float32),
+        atol=0.15, rtol=0.15,  # bf16 params + different reduction orders
+    )
+
+
+def test_sliding_window_ring_cache_decode():
+    """Decode far beyond the window: ring cache stays finite & bounded."""
+    cfg = get_config("mixtral-8x7b").reduced()
+    assert cfg.sliding_window is not None
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    ctx = 256  # > window (64)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (1, 16)).astype(np.int32)}
+    logits, cache = m.prefill(params, batch, ctx)
+    # cache length is the window, not the context
+    k_cache = jax.tree.leaves(cache["layers"])[0]
+    decode = jax.jit(lambda p, bt, c: m.decode_step(p, bt, c, ctx))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(80):  # wrap the ring buffer
+        logits, cache = decode(params, {"tokens": tok}, cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_registry_contains_all_assigned():
+    known = list_configs()
+    for a in ASSIGNED + ["resnet18-cifar10", "mobilenet-head-office31"]:
+        assert a in known
