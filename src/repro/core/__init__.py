@@ -6,7 +6,8 @@ from .protocol import (
 from .client import Client, JaxClient
 from .server import Server, History, RoundRecord, make_cost_model_for
 from .cost_model import CostModel, DeviceProfile, PROFILES, AWS_DEVICE_FARM
-from .rounds import RoundSpec, make_round_step, make_client_update
+from .rounds import RoundSpec, make_round_step, make_client_update, init_residuals
+from .compression import Int8Codec, TopKCodec, NullCodec, compress_update, decompress_update
 from .strategy import (
     Strategy, FedAvg, FedProx, FedTau, FedOpt, FedAdam, FedYogi, FedAvgM,
     STRATEGIES, tau_from_reference_processor,

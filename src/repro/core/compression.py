@@ -1,14 +1,30 @@
-"""Update compression codecs (beyond paper).
+"""Update compression codecs — the compressed-wire round path's wire format.
 
 The paper measures communication as a first-class system cost; these codecs
 shrink the client->server payload that the cost model charges for:
 
-- int8 block quantization (8x over fp32 wire, ~4x over bf16), via the
-  Pallas quantize kernel;
-- top-k sparsification with error feedback (classic gradient compression).
+- ``Int8Codec``: int8 block quantization (~4x over fp32 wire), via the
+  Pallas quantize kernel; decoded server-side through the fused
+  dequantize+weighted-reduce kernel (one HBM pass over the int8 payload).
+- ``TopKCodec``: top-k sparsification with error feedback (classic gradient
+  compression).
+- ``NullCodec``: identity fp32 wire — the uncompressed baseline with the
+  same interface, so the round engine has one code path.
 
 Codecs operate on the *delta* (client params - global params), which is
-small-magnitude and quantizes well.
+small-magnitude and quantizes well.  Two surfaces:
+
+- 1-D ``encode`` / ``decode`` on a single flat delta vector (the python-side
+  Server/Client path and unit tests);
+- batched ``encode_batch`` / ``decode_batch`` / ``reduce`` on a (C, N) delta
+  matrix — jit-/vmap-free row-block layout used inside the jitted round
+  step (core/rounds.py).  ``reduce`` consumes the *encoded* payload directly
+  so the Int8 weighted-mean itself never materializes the fp32 (C, N)
+  matrix (the round step still dequantizes once per round to compute the
+  error-feedback residual).
+
+``wire_bytes(n)`` is the per-client uplink charge the CostModel uses in
+place of raw ``tree_bytes`` (core/server.py, core/cost_model.py).
 """
 from __future__ import annotations
 
@@ -29,11 +45,39 @@ PyTree = Any
 
 
 @dataclass(frozen=True)
+class NullCodec:
+    """Identity codec: full-precision fp32 wire (the uncompressed baseline)."""
+
+    def wire_bytes(self, n_params: int) -> int:
+        return 4 * n_params
+
+    def encode(self, delta_vec: jnp.ndarray):
+        return {"delta": delta_vec.astype(jnp.float32), "n": delta_vec.shape[0]}
+
+    def decode(self, enc) -> jnp.ndarray:
+        return enc["delta"]
+
+    def encode_batch(self, deltas: jnp.ndarray):
+        return {"delta": deltas.astype(jnp.float32), "n": deltas.shape[1]}
+
+    def decode_batch(self, enc) -> jnp.ndarray:
+        return enc["delta"]
+
+    def reduce(self, enc, weights: jnp.ndarray, *, interpret: bool = False):
+        return ops.fedavg_reduce(enc["delta"], weights, interpret=interpret)
+
+
+@dataclass(frozen=True)
 class Int8Codec:
     block: int = 256
 
+    def _n_scales(self, n_params: int) -> int:
+        return -(-n_params // self.block)  # ceil: encode pads to a block multiple
+
     def wire_bytes(self, n_params: int) -> int:
-        return n_params + 4 * (n_params // self.block)  # int8 + fp32 scales
+        # int8 payload (pad blocks need not cross the wire: the receiver
+        # re-pads from n) + one fp32 scale per ceil(n/block) block
+        return n_params + 4 * self._n_scales(n_params)
 
     def encode(self, delta_vec: jnp.ndarray):
         n = delta_vec.shape[0]
@@ -46,6 +90,39 @@ class Int8Codec:
         vec = ops.dequantize_int8(enc["q"], enc["scale"], block=self.block)
         return vec[: enc["n"]]
 
+    # ---- batched (C, N) wire path used inside the jitted round step ----
+    def encode_batch(self, deltas: jnp.ndarray):
+        """(C, N) -> q (C, Np) int8 + scales (C, Np/block); Np = padded N.
+
+        Rows are padded to a block multiple, so flattening (C, Np) keeps
+        every quantization block inside one client row and the 1-D Pallas
+        kernel applies unchanged.
+        """
+        c, n = deltas.shape
+        pad = (-n) % self.block
+        padded = jnp.pad(deltas, ((0, 0), (0, pad)))
+        np_ = n + pad
+        q, scale = ops.quantize_int8(padded.reshape(-1), block=self.block)
+        return {
+            "q": q.reshape(c, np_),
+            "scale": scale.reshape(c, np_ // self.block),
+            "n": n,
+        }
+
+    def decode_batch(self, enc) -> jnp.ndarray:
+        c = enc["q"].shape[0]
+        vec = ops.dequantize_int8(
+            enc["q"].reshape(-1), enc["scale"].reshape(-1), block=self.block
+        )
+        return vec.reshape(c, -1)[:, : enc["n"]]
+
+    def reduce(self, enc, weights: jnp.ndarray, *, interpret: bool = False):
+        """Weighted-mean decode straight off the int8 payload (fused kernel)."""
+        avg = ops.dequant_reduce(
+            enc["q"], enc["scale"], weights, block=self.block, interpret=interpret
+        )
+        return avg[: enc["n"]]
+
 
 @dataclass(frozen=True)
 class TopKCodec:
@@ -53,18 +130,37 @@ class TopKCodec:
 
     frac: float = 0.01
 
+    def k_of(self, n_params: int) -> int:
+        return max(1, int(n_params * self.frac))
+
     def wire_bytes(self, n_params: int) -> int:
-        k = max(1, int(n_params * self.frac))
-        return k * 8  # int32 index + fp32 value
+        return self.k_of(n_params) * 8  # int32 index + fp32 value
 
     def encode(self, delta_vec: jnp.ndarray):
         n = delta_vec.shape[0]
-        k = max(1, int(n * self.frac))
-        vals, idx = jax.lax.top_k(jnp.abs(delta_vec), k)
+        _, idx = jax.lax.top_k(jnp.abs(delta_vec), self.k_of(n))
         return {"idx": idx, "val": delta_vec[idx], "n": n}
 
     def decode(self, enc) -> jnp.ndarray:
         return jnp.zeros((enc["n"],), enc["val"].dtype).at[enc["idx"]].set(enc["val"])
+
+    def encode_batch(self, deltas: jnp.ndarray):
+        n = deltas.shape[1]
+        _, idx = jax.lax.top_k(jnp.abs(deltas), self.k_of(n))  # (C, k)
+        return {"idx": idx, "val": jnp.take_along_axis(deltas, idx, axis=1), "n": n}
+
+    def decode_batch(self, enc) -> jnp.ndarray:
+        c = enc["idx"].shape[0]
+        rows = jnp.arange(c)[:, None]
+        return (
+            jnp.zeros((c, enc["n"]), enc["val"].dtype)
+            .at[rows, enc["idx"]]
+            .set(enc["val"])
+        )
+
+    def reduce(self, enc, weights: jnp.ndarray, *, interpret: bool = False):
+        # sparse payload: densify per client, then the weighted-reduce kernel
+        return ops.fedavg_reduce(self.decode_batch(enc), weights, interpret=interpret)
 
 
 def compress_update(

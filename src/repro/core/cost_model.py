@@ -96,16 +96,28 @@ class CostModel:
     """Simulates the fleet's time/energy for each FL round."""
 
     profiles: list[DeviceProfile]
-    update_bytes: int                      # per-direction model payload
+    update_bytes: int                      # full-precision model payload
     comm_power_w: float = 1.2
 
     def client_round_cost(
-        self, client_id: int, steps: int, *, payload_bytes: int | None = None
+        self,
+        client_id: int,
+        steps: int,
+        *,
+        payload_bytes: int | None = None,
+        uplink_bytes: int | None = None,
     ) -> ClientCost:
+        """Time/energy for one client-round.
+
+        ``payload_bytes`` overrides both directions (legacy callers);
+        ``uplink_bytes`` overrides only the client->server leg — the codec-
+        compressed wire — while the downlink stays the full global model.
+        """
         p = self.profiles[client_id % len(self.profiles)]
-        payload = self.update_bytes if payload_bytes is None else payload_bytes
+        down = self.update_bytes if payload_bytes is None else payload_bytes
+        up = down if uplink_bytes is None else uplink_bytes
         t_compute = steps * p.step_time_s
-        t_comm = payload * 8 / (p.uplink_mbps * 1e6) + payload * 8 / (
+        t_comm = up * 8 / (p.uplink_mbps * 1e6) + down * 8 / (
             p.downlink_mbps * 1e6
         )
         return ClientCost(
@@ -119,12 +131,23 @@ class CostModel:
         )
 
     def round_costs(
-        self, steps_per_client: list[int], *, payload_bytes: int | None = None
+        self,
+        steps_per_client: list[int],
+        *,
+        payload_bytes: int | None = None,
+        uplink_bytes: int | None = None,
     ) -> list[ClientCost]:
         return [
-            self.client_round_cost(cid, s, payload_bytes=payload_bytes)
+            self.client_round_cost(
+                cid, s, payload_bytes=payload_bytes, uplink_bytes=uplink_bytes
+            )
             for cid, s in enumerate(steps_per_client)
         ]
+
+    def round_comm_bytes(self, n_clients: int, *, uplink_bytes: int | None = None) -> int:
+        """Total bytes crossing the network this round (up + down, all clients)."""
+        up = self.update_bytes if uplink_bytes is None else uplink_bytes
+        return (up + self.update_bytes) * n_clients
 
     def round_wall_time(self, costs: list[ClientCost]) -> float:
         """Synchronous FedAvg: the round ends when the slowest client reports."""

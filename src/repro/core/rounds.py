@@ -15,6 +15,20 @@ mesh mappings (DESIGN.md §4):
 The paper's tau-cutoff becomes a *per-client step budget* ``step_budgets``
 (int (C,)): clients keep stepping while ``i < budget_c`` and freeze their
 parameters afterwards — shape-static, mask-realized partial work.
+
+**Compressed wire** (``RoundSpec.codec``): when a codec (core/compression.py)
+is set, the parallel round step encodes each client's flat delta *inside the
+jitted step* — delta + carried error-feedback residual -> codec payload —
+and the server decodes through the codec's fused reduce (for Int8 the
+dequantize+weighted-reduce Pallas kernel: one HBM pass over the int8
+payload).  What was not transmitted (quantization error / untransmitted
+top-k mass) becomes the client's new residual, carried across rounds as a
+(C, n_params) leaf of the client state pytree (``init_residuals``), so the
+compression error telescopes instead of accumulating.  The compressed round
+step takes that residual state after ``server_state`` and returns its
+updated value: ``round_step(global, server_state, residuals, batches,
+weights, budgets, rnd) -> (new_global, new_server_state, new_residuals,
+metrics)``.
 """
 from __future__ import annotations
 
@@ -41,6 +55,7 @@ class RoundSpec:
     execution_mode: str          # "parallel" | "sequential" | "fsdp"
     prox_mu: float = 0.0         # FedProx proximal coefficient (0 = off)
     microbatches: int = 1        # gradient accumulation within one local step
+    codec: Any = None            # UpdateCodec -> compressed-wire round path
 
 
 def make_client_update(
@@ -148,6 +163,14 @@ def make_round_step(
     sequential: identical signature; clients are scanned, not mapped.
     """
     client_update = make_client_update(loss_fn, opt, spec, trainable_mask)
+
+    if spec.codec is not None:
+        if spec.execution_mode != "parallel" or mesh is not None:
+            raise NotImplementedError(
+                "codec is only supported on the single-host parallel round "
+                "path for now (mesh shard_map / sequential: ROADMAP open item)"
+            )
+        return _make_compressed_round_step(client_update, strategy, spec)
 
     if spec.execution_mode == "parallel" and mesh is not None:
         from jax.sharding import PartitionSpec as P
@@ -268,5 +291,60 @@ def make_round_step(
             "steps_total": steps_total,
         }
         return new_global, new_state, metrics
+
+    return round_step
+
+
+def init_residuals(global_params: PyTree, n_clients: int) -> jnp.ndarray:
+    """Zero error-feedback state for the compressed round path: one flat
+    fp32 residual vector per client, (C, n_params)."""
+    from repro.utils.pytree import tree_size
+
+    return jnp.zeros((n_clients, tree_size(global_params)), jnp.float32)
+
+
+def _make_compressed_round_step(client_update, strategy: Strategy, spec: RoundSpec):
+    """Compressed-wire parallel round step (see module docstring).
+
+    Per round: vmap local training, flatten per-client deltas, add the
+    carried residual, encode with ``spec.codec``, aggregate straight off the
+    encoded payload (``codec.reduce`` — the fused dequant+reduce kernel for
+    Int8), and keep ``delta - decode(payload)`` as the next residual.
+    """
+    from repro.utils.pytree import tree_flatten_to_vector, tree_unflatten_from_vector
+
+    codec = spec.codec
+
+    def round_step(
+        global_params, server_state, residuals, batches, weights, step_budgets, rnd
+    ):
+        new_params, losses, steps = jax.vmap(
+            client_update, in_axes=(None, 0, 0)
+        )(global_params, batches, step_budgets)
+
+        flat_global = tree_flatten_to_vector(global_params)
+        deltas = jax.vmap(
+            lambda p: tree_flatten_to_vector(p) - flat_global
+        )(new_params)                                     # (C, n_params) fp32
+        deltas = deltas + residuals                       # error feedback in
+        enc = codec.encode_batch(deltas)                  # the wire payload
+        new_residuals = deltas - codec.decode_batch(enc)  # untransmitted mass
+
+        avg_delta = codec.reduce(enc, weights)            # fused server decode
+        avg_params = tree_unflatten_from_vector(
+            flat_global + avg_delta, global_params
+        )
+        new_global, new_state = strategy.server_update(
+            avg_params, global_params, server_state, rnd
+        )
+        metrics = {
+            "client_loss_mean": jnp.mean(losses),
+            "client_loss_max": jnp.max(losses),
+            "steps_total": jnp.sum(steps),
+            "residual_norm_mean": jnp.mean(
+                jnp.linalg.norm(new_residuals, axis=1)
+            ),
+        }
+        return new_global, new_state, new_residuals, metrics
 
     return round_step

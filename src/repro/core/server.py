@@ -15,7 +15,7 @@ import jax
 import numpy as np
 
 from repro.utils.logging import MetricsLogger
-from repro.utils.pytree import tree_bytes
+from repro.utils.pytree import tree_bytes, tree_size
 
 from .client import Client
 from .cost_model import CostModel
@@ -78,6 +78,8 @@ class Server:
     cost_model: CostModel | None = None
     eval_fn: Callable | None = None      # (params) -> dict (centralized eval)
     eval_every: int = 1
+    codec: Any = None                    # UpdateCodec: uplink charged at
+                                         # codec.wire_bytes, not tree_bytes
     logger: MetricsLogger = field(default_factory=lambda: MetricsLogger("server"))
 
     def run(self, global_params: PyTree, num_rounds: int) -> tuple[PyTree, History]:
@@ -96,12 +98,21 @@ class Server:
             global_params = self.strategy.aggregate_fit(rnd, results, global_params)
 
             # ---- system-cost accounting (the paper's §5 measurement) ----
+            # uplink is charged at the codec's wire size (compressed-wire
+            # path); the downlink stays the full-precision global model.
             wall, energy, comm = 0.0, 0.0, 0
             if self.cost_model is not None:
-                costs = self.cost_model.round_costs(steps_per_client)
+                uplink = None
+                if self.codec is not None:
+                    uplink = self.codec.wire_bytes(tree_size(global_params))
+                costs = self.cost_model.round_costs(
+                    steps_per_client, uplink_bytes=uplink
+                )
                 wall = self.cost_model.round_wall_time(costs)
                 energy = self.cost_model.round_energy(costs)
-                comm = 2 * self.cost_model.update_bytes * len(results)
+                comm = self.cost_model.round_comm_bytes(
+                    len(results), uplink_bytes=uplink
+                )
 
             train_loss = float(
                 np.average(

@@ -1,0 +1,73 @@
+"""Fused dequantize + FedAvg weighted reduce (Pallas TPU) — the server-side
+decode hotspot of the compressed-wire round path.
+
+Input is the int8 wire payload of every client: q (C, N) int8 values and
+per-256-block fp32 scales (C, N/block).  The unfused reduce materializes
+the dequantized fp32 (C, N) matrix in HBM (4x the int8 payload) and then
+reads it back for the weighted reduce — three HBM passes over C x N.  This
+kernel makes ONE pass: each grid step loads a (C, bn) int8 tile plus its
+scales, dequantizes in VMEM, and contracts against the normalized weight
+vector on the MXU (1xC @ Cxbn, fp32 accumulate).  HBM traffic of the
+reduce is the int8 payload + scales + the (N,) result — the bandwidth
+roofline for this op.  (The error-feedback residual in core/rounds.py
+still dequantizes the payload separately, once per round.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _dequant_reduce_kernel(q_ref, s_ref, w_ref, o_ref, *, block: int):
+    q = q_ref[...].astype(jnp.float32)              # (C, bn)
+    s = s_ref[...].astype(jnp.float32)              # (C, bn/block)
+    w = w_ref[...].astype(jnp.float32)              # (1, C) normalized weights
+    c, bn = q.shape
+    x = (q.reshape(c, bn // block, block) * s[:, :, None]).reshape(c, bn)
+    acc = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (1, bn)
+    o_ref[...] = acc[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bn", "interpret"))
+def dequant_reduce(
+    q, scales, weights, *, block: int = BLOCK, bn: int = 8192, interpret: bool = False
+):
+    """(C,N) int8 x (C,N/block) fp32 x (C,) -> (N,) fp32 weighted mean.
+
+    N % block == 0 (the encoder pads).  N is further padded up to a multiple
+    of the tile width bn with zero blocks (zero scale -> zero contribution)
+    and the pad is sliced off the result.  Weights are auto-normalized.
+    """
+    c, n = q.shape
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    assert scales.shape == (c, n // block), scales.shape
+    bn = min(bn, n)
+    bn = max(block, (bn // block) * block)
+    pad = (-n) % bn
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // block)))
+    np_ = n + pad
+    wn = weights.astype(jnp.float32) / jnp.sum(weights.astype(jnp.float32))
+    wn = wn.reshape(1, c)
+
+    out = pl.pallas_call(
+        functools.partial(_dequant_reduce_kernel, block=block),
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((c, bn), lambda i: (0, i)),
+            pl.BlockSpec((c, bn // block), lambda i: (0, i)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=interpret,
+    )(q, scales, wn)
+    return out[:n] if pad else out

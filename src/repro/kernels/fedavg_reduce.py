@@ -25,20 +25,29 @@ def _reduce_kernel(u_ref, w_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def fedavg_reduce(updates, weights, *, bn: int = 8192, interpret: bool = False):
-    """(C,N) x (C,) -> (N,) weighted mean (weights auto-normalized)."""
+    """(C,N) x (C,) -> (N,) weighted mean (weights auto-normalized).
+
+    N is padded up to a multiple of the tile width bn (ceil-division grid)
+    so tail elements are reduced too, and the pad is sliced off the result.
+    """
     c, n = updates.shape
-    bn = min(bn, n)
+    bn = max(128, min(bn, n) // 128 * 128)  # lane-aligned tile width
+    pad = (-n) % bn
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+    np_ = n + pad
     wn = (weights.astype(jnp.float32) / jnp.sum(weights.astype(jnp.float32)))
     wn = wn.reshape(1, c)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _reduce_kernel,
-        grid=(n // bn,),
+        grid=(np_ // bn,),
         in_specs=[
             pl.BlockSpec((c, bn), lambda i: (0, i)),
             pl.BlockSpec((1, c), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), updates.dtype),
+        out_shape=jax.ShapeDtypeStruct((np_,), updates.dtype),
         interpret=interpret,
     )(updates, wn)
+    return out[:n] if pad else out

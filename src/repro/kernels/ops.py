@@ -80,12 +80,26 @@ def fedavg_reduce(updates, weights, *, interpret=False):
     if _use_pallas() or interpret:
         from .fedavg_reduce import fedavg_reduce as fr
 
-        if updates.shape[-1] % 1024 == 0:
-            return fr(
-                updates, weights,
+        # the kernel pads N up to a lane-aligned tile itself: no shape gate
+        return fr(
+            updates, weights,
+            interpret=interpret or jax.default_backend() != "tpu",
+        )
+    return ref.fedavg_reduce(updates, weights)
+
+
+def dequant_reduce(q, scales, weights, block: int = 256, *, interpret=False):
+    """Fused server-side decode: int8 payload (C,N) + scales -> (N,) mean."""
+    if _use_pallas() or interpret:
+        from .dequant_reduce import dequant_reduce as dr
+
+        # the encoder pads to a block multiple; the kernel tile-pads beyond
+        if q.shape[-1] % block == 0:
+            return dr(
+                q, scales, weights, block=block,
                 interpret=interpret or jax.default_backend() != "tpu",
             )
-    return ref.fedavg_reduce(updates, weights)
+    return ref.dequant_reduce(q, scales, weights, block=block)
 
 
 # ---------------- int8 codec ----------------

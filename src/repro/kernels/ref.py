@@ -270,3 +270,19 @@ def quantize_int8(x: jnp.ndarray, block: int = 256) -> tuple[jnp.ndarray, jnp.nd
 def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, block: int = 256) -> jnp.ndarray:
     qf = q.reshape(-1, block).astype(jnp.float32)
     return (qf * scale[:, None]).reshape(-1)
+
+
+def dequant_reduce(
+    q: jnp.ndarray,        # (C, N) int8 wire payload
+    scales: jnp.ndarray,   # (C, N/block) fp32 block scales
+    weights: jnp.ndarray,  # (C,) aggregation weights
+    block: int = 256,
+) -> jnp.ndarray:
+    """Fused-kernel oracle: dequantize every client row, weighted mean."""
+    c, n = q.shape
+    x = q.astype(jnp.float32).reshape(c, n // block, block) * (
+        scales.astype(jnp.float32)[:, :, None]
+    )
+    wf = weights.astype(jnp.float32)
+    acc = jnp.einsum("c,cn->n", wf, x.reshape(c, n))
+    return acc / jnp.sum(wf)

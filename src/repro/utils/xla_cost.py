@@ -1,0 +1,33 @@
+"""Version-tolerant access to XLA's ``compiled.cost_analysis()``.
+
+Older JAX returns a single properties dict; newer JAX returns a list with
+one dict per partition (and some backends return ``None``).  Everything in
+this repo that compares the HLO-text analyzer against XLA's own counters
+goes through :func:`xla_cost_dict` so both shapes work.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+
+def xla_cost_dict(compiled: Any) -> dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` to one flat ``{metric: value}``.
+
+    Accepts a compiled executable (anything with ``cost_analysis()``), an
+    already-extracted dict, or the list-of-dicts shape.  Multi-partition
+    lists are summed per key — cost properties are additive across
+    partitions of one module.
+    """
+    props = compiled.cost_analysis() if hasattr(compiled, "cost_analysis") else compiled
+    if props is None:
+        return {}
+    if isinstance(props, Mapping):
+        return {str(k): float(v) for k, v in props.items()}
+    # list/tuple of per-partition dicts (newer JAX)
+    out: dict[str, float] = {}
+    for part in props:
+        if part is None:
+            continue
+        for k, v in part.items():
+            out[str(k)] = out.get(str(k), 0.0) + float(v)
+    return out

@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim: property tests degrade to skips when absent.
+
+``hypothesis`` lives in the ``test`` extra (see pyproject.toml) and is not
+part of the runtime deps.  When it is missing, this module substitutes a
+``given`` decorator that turns each property test into a single skipped
+test instead of a collection error, so the rest of the suite still runs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade: skip property tests, keep the suite green
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `hypothesis.strategies`: every factory returns None."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed (pip install '.[test]')")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco

@@ -4,14 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.checkpoint.io import load_pytree, save_pytree
 from repro.core import (
     FedAdam, FedAvg, FedProx, FedTau, RoundSpec, make_round_step,
     parameters_to_pytree, pytree_to_parameters,
 )
-from repro.core.compression import Int8Codec, TopKCodec, compress_update, decompress_update
+from repro.core.compression import (
+    Int8Codec, NullCodec, TopKCodec, compress_update, decompress_update,
+)
 from repro.core.cost_model import PROFILES, CostModel
 from repro.core.strategy.base import weighted_mean
 from repro.data.federated import dirichlet_partition, iid_partition, partition_stats
@@ -186,6 +188,41 @@ def test_tau_steps_under_budget():
 
 
 # ---------------- compression ----------------
+@pytest.mark.parametrize("n", [256, 300, 511, 512, 513])
+def test_int8_wire_bytes_match_encoded_payload(n):
+    """wire_bytes must count ceil(n/block) scales — the encoder pads to a
+    block multiple — and match the actual payload (pad int8s excluded:
+    the receiver re-pads from n)."""
+    codec = Int8Codec()
+    vec = jnp.asarray(np.random.default_rng(n).normal(size=(n,)), jnp.float32)
+    enc = codec.encode(vec)
+    n_scales = enc["scale"].size
+    assert n_scales == -(-n // codec.block)
+    actual = n * enc["q"].dtype.itemsize + n_scales * enc["scale"].dtype.itemsize
+    assert codec.wire_bytes(n) == actual
+
+
+def test_codec_wire_bytes_ordering():
+    """TopK(1%) < Int8 < Null(fp32) for any realistically sized update."""
+    n = 100_000
+    assert TopKCodec(frac=0.01).wire_bytes(n) < Int8Codec().wire_bytes(n)
+    assert Int8Codec().wire_bytes(n) * 3.5 < NullCodec().wire_bytes(n)
+
+
+def test_cost_model_charges_compressed_uplink():
+    """uplink_bytes shrinks t_comm/energy; downlink unchanged."""
+    cm = CostModel(profiles=[PROFILES["pixel-4"]], update_bytes=4_000_000)
+    full = cm.client_round_cost(0, 10)
+    comp = cm.client_round_cost(0, 10, uplink_bytes=1_000_000)
+    assert comp.t_comm_s < full.t_comm_s
+    assert comp.t_compute_s == full.t_compute_s
+    p = PROFILES["pixel-4"]
+    expected = 1_000_000 * 8 / (p.uplink_mbps * 1e6) + 4_000_000 * 8 / (p.downlink_mbps * 1e6)
+    assert comp.t_comm_s == pytest.approx(expected)
+    # round totals: up (compressed) + down (full) per client
+    assert cm.round_comm_bytes(3, uplink_bytes=1_000_000) == 3 * 5_000_000
+
+
 def test_int8_codec_roundtrip_and_wire_size():
     codec = Int8Codec()
     rng = np.random.default_rng(0)

@@ -4,10 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
+from repro.kernels.dequant_reduce import dequant_reduce
 from repro.kernels.fedavg_reduce import fedavg_reduce
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.quantize import dequantize_int8, quantize_int8
@@ -119,6 +120,38 @@ def test_fedavg_reduce_matches_oracle(c, n, bn):
     out = fedavg_reduce(u, w, interpret=True, bn=bn)
     exp = ref.fedavg_reduce(u, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("c,n,bn", [(4, 5000, 4096), (3, 8193, 8192), (2, 100, 64)])
+def test_fedavg_reduce_tail_block(c, n, bn):
+    """Regression: n % bn != 0 — the tail block must be reduced, not dropped."""
+    u = _randn((c, n))
+    w = jnp.asarray(RNG.random(c) + 0.1, jnp.float32)
+    out = fedavg_reduce(u, w, interpret=True, bn=bn)
+    exp = ref.fedavg_reduce(u, w)
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5, rtol=2e-5)
+    # the tail specifically (the elements past the last full tile)
+    np.testing.assert_allclose(
+        np.asarray(out[-(n % bn):]), np.asarray(exp[-(n % bn):]), atol=2e-5, rtol=2e-5
+    )
+
+
+@pytest.mark.parametrize("c,n,bn", [(4, 8192, 4096), (3, 5120, 2048), (2, 2048, 2048)])
+def test_dequant_reduce_matches_oracle(c, n, bn):
+    """Fused dequantize+weighted-reduce == dequantize rows then fedavg_reduce."""
+    x = _randn((c, n))
+    q, s = ref.quantize_int8(x.reshape(-1))
+    q = q.reshape(c, n)
+    s = s.reshape(c, n // 256)
+    w = jnp.asarray(RNG.random(c) + 0.1, jnp.float32)
+    fused = dequant_reduce(q, s, w, interpret=True, bn=bn)
+    exp = ref.dequant_reduce(q, s, w)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(exp), atol=2e-5, rtol=2e-5)
+    # and the unfused composition agrees
+    dense = jnp.stack([ref.dequantize_int8(q[i], s[i]) for i in range(c)])
+    unfused = ref.fedavg_reduce(dense, w)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused), atol=2e-5, rtol=2e-5)
 
 
 @settings(max_examples=20, deadline=None)
