@@ -1,0 +1,185 @@
+"""Compression benchmark: accuracy-vs-wire-bytes + fused-kernel bandwidth.
+
+Three sections, CSV rows like benchmarks/run.py:
+
+1. ``wire[...]``    — per-client uplink bytes for the FULL resnet18_cifar10
+   and qwen3_0_6b configs under every codec (param counts via
+   ``jax.eval_shape``: nothing is allocated), with the reduction ratio vs
+   the fp32 wire.  ISSUE-1 acceptance: Int8 >= 3.5x.
+2. ``acc[...]``     — the compressed round engine run for ``--rounds`` on
+   CPU-reduced variants of both configs: final eval loss per codec next to
+   the cumulative uplink bytes it cost (the paper's accuracy-vs-system-cost
+   tradeoff, with communication as the cost axis).
+3. ``kernel[...]``  — interpret-mode timing of the fused dequant+reduce
+   Pallas kernel vs the unfused dequantize-then-fedavg_reduce pair, with
+   effective GB/s over the int8 payload.
+
+  PYTHONPATH=src python -m benchmarks.compression_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import FedAvg, Int8Codec, NullCodec, RoundSpec, TopKCodec, init_residuals, make_round_step
+from repro.data.loader import lm_round_batch
+from repro.models import build_model
+from repro.optim import sgd
+from repro.utils.pytree import tree_size
+
+CODECS = {
+    "fp32": NullCodec(),
+    "int8": Int8Codec(),
+    "topk1%": TopKCodec(frac=0.01),
+}
+
+
+def _timeit(fn, *args, n=3):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+# ---------------------------------------------------------------- section 1
+def bench_wire_bytes() -> list[str]:
+    rows = []
+    for arch in ("resnet18-cifar10", "qwen3-0.6b"):
+        m = build_model(arch)
+        shapes = jax.eval_shape(m.init, jax.random.key(0))
+        n_params = int(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)))
+        fp32 = CODECS["fp32"].wire_bytes(n_params)
+        for name, codec in CODECS.items():
+            wb = codec.wire_bytes(n_params)
+            rows.append(
+                f"wire[{arch}/{name}],0,"
+                f"bytes={wb};reduction_vs_fp32={fp32 / wb:.2f}x"
+            )
+    return rows
+
+
+# ---------------------------------------------------------------- section 2
+def _run_rounds(m, params, train, eval_batch, codec, rounds):
+    strat = FedAvg()
+    C = int(jax.tree.leaves(train)[0].shape[0])
+    steps = int(jax.tree.leaves(train)[0].shape[1])
+    spec = RoundSpec(max_steps=steps, execution_mode="parallel", codec=codec)
+    rs = jax.jit(make_round_step(m.loss_fn, sgd(0.1), strat, spec))
+    w = jnp.ones(C)
+    bud = jnp.full((C,), steps, jnp.int32)
+    p, state, res = params, strat.init_state(params), init_residuals(params, C)
+    for rnd in range(rounds):
+        p, state, res, _ = rs(p, state, res, train, w, bud, rnd)
+    loss, _ = m.loss_fn(p, eval_batch)
+    uplink = codec.wire_bytes(tree_size(params)) * C * rounds
+    return float(loss), uplink
+
+
+def _cnn_setup(seed=0):
+    m = build_model(get_config("resnet18-cifar10").reduced())
+    cfg = m.cfg
+    rng = np.random.default_rng(seed)
+    C, steps, B = 3, 1, 8
+    shape = (cfg.image_size, cfg.image_size, cfg.channels)
+    centers = rng.normal(0.0, 0.8, size=(cfg.num_classes, *shape))
+    y = rng.integers(0, cfg.num_classes, (C, steps, B))
+    x = centers[y] + 0.5 * rng.normal(size=(C, steps, B, *shape))
+    ye = rng.integers(0, cfg.num_classes, 64)
+    xe = centers[ye] + 0.5 * rng.normal(size=(64, *shape))
+    train = {"x": jnp.asarray(x, jnp.float32), "y": jnp.asarray(y, jnp.int32)}
+    eval_batch = {"x": jnp.asarray(xe, jnp.float32), "y": jnp.asarray(ye, jnp.int32)}
+    return m, m.init(jax.random.key(seed)), train, eval_batch
+
+
+def _lm_setup(seed=0):
+    cfg = get_config("qwen3-0.6b").reduced()
+    m = build_model(cfg)
+    C, steps, B, S = 2, 1, 2, 64
+    train = lm_round_batch(
+        n_clients=C, steps=steps, batch_size=B, seq_len=S,
+        vocab_size=cfg.vocab_size, seed=seed,
+    )
+    train = jax.tree.map(jnp.asarray, train)
+    hold = lm_round_batch(
+        n_clients=1, steps=1, batch_size=4, seq_len=S,
+        vocab_size=cfg.vocab_size, seed=seed + 1,
+    )
+    eval_batch = {k: jnp.asarray(v[0, 0]) for k, v in hold.items()}
+    return m, m.init(jax.random.key(seed)), train, eval_batch
+
+
+def bench_accuracy_vs_bytes(rounds: int) -> list[str]:
+    rows = []
+    for label, setup in (("resnet18_cifar10", _cnn_setup), ("qwen3_0_6b", _lm_setup)):
+        m, params, train, eval_batch = setup()
+        for name, codec in CODECS.items():
+            t0 = time.perf_counter()
+            loss, uplink = _run_rounds(m, params, train, eval_batch, codec, rounds)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append(
+                f"acc[{label}/{name}],{us:.0f},"
+                f"eval_loss={loss:.4f};uplink_bytes={uplink}"
+            )
+    return rows
+
+
+# ---------------------------------------------------------------- section 3
+def bench_kernel(fast: bool) -> list[str]:
+    from repro.kernels import ref
+    from repro.kernels.dequant_reduce import dequant_reduce
+    from repro.kernels.fedavg_reduce import fedavg_reduce
+    from repro.kernels.quantize import dequantize_int8
+
+    rng = np.random.default_rng(0)
+    c, n = (4, 1 << 16) if fast else (8, 1 << 18)
+    x = jnp.asarray(rng.normal(size=(c * n,)), jnp.float32)
+    q, s = ref.quantize_int8(x)
+    q = q.reshape(c, n)
+    s = s.reshape(c, n // 256)
+    w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+
+    fused = jax.jit(lambda q, s, w: dequant_reduce(q, s, w, interpret=True))
+
+    def unfused_fn(q, s, w):
+        dense = dequantize_int8(
+            q.reshape(-1), s.reshape(-1), interpret=True
+        ).reshape(c, n)
+        return fedavg_reduce(dense, w, interpret=True)
+
+    unfused = jax.jit(unfused_fn)
+
+    us_f = _timeit(fused, q, s, w)
+    us_u = _timeit(unfused, q, s, w)
+    payload = c * n + 4 * c * (n // 256)  # int8 + scales over the wire
+    gbps = payload / (us_f / 1e6) / 1e9
+    return [
+        f"kernel[dequant_reduce_fused_{c}x{n}],{us_f:.0f},GBps={gbps:.2f}",
+        f"kernel[dequant_then_reduce_{c}x{n}],{us_u:.0f},fused_speedup={us_u / us_f:.2f}x",
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args()
+    rounds = args.rounds if args.rounds is not None else (3 if args.fast else 10)
+
+    print("name,us_per_call,derived")
+    for row in bench_wire_bytes():
+        print(row)
+    for row in bench_accuracy_vs_bytes(rounds):
+        print(row)
+    for row in bench_kernel(args.fast):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()
