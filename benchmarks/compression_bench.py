@@ -14,7 +14,11 @@ Three sections, CSV rows like benchmarks/run.py:
    Pallas kernel vs the unfused dequantize-then-fedavg_reduce pair, with
    effective GB/s over the int8 payload.
 
-  PYTHONPATH=src python -m benchmarks.compression_bench [--fast]
+  PYTHONPATH=src python -m benchmarks.compression_bench [--fast|--smoke]
+
+``--smoke`` is the CI guard: the tiny head model, 2 rounds, small kernel
+shapes — it exists so the harness itself cannot silently rot (every section
+executes against the live engine API on every push).
 """
 from __future__ import annotations
 
@@ -26,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import FedAvg, Int8Codec, NullCodec, RoundSpec, TopKCodec, init_residuals, make_round_step
+from repro.core import FedAvg, Int8Codec, NullCodec, RoundSpec, TopKCodec, make_round_step
 from repro.data.loader import lm_round_batch
 from repro.models import build_model
 from repro.optim import sgd
@@ -74,9 +78,10 @@ def _run_rounds(m, params, train, eval_batch, codec, rounds):
     rs = jax.jit(make_round_step(m.loss_fn, sgd(0.1), strat, spec))
     w = jnp.ones(C)
     bud = jnp.full((C,), steps, jnp.int32)
-    p, state, res = params, strat.init_state(params), init_residuals(params, C)
+    p, state = params, strat.init_state(params)
+    cstate = codec.init_client_state(C, tree_size(params))
     for rnd in range(rounds):
-        p, state, res, _ = rs(p, state, res, train, w, bud, rnd)
+        p, state, cstate, _ = rs(p, state, cstate, train, w, bud, rnd)
     loss, _ = m.loss_fn(p, eval_batch)
     uplink = codec.wire_bytes(tree_size(params)) * C * rounds
     return float(loss), uplink
@@ -115,9 +120,28 @@ def _lm_setup(seed=0):
     return m, m.init(jax.random.key(seed)), train, eval_batch
 
 
-def bench_accuracy_vs_bytes(rounds: int) -> list[str]:
+def _head_setup(seed=0):
+    """Tiny head model — the --smoke fixture (sub-second per codec)."""
+    m = build_model("mobilenet-head-office31")
+    rng = np.random.default_rng(seed)
+    C, steps, B = 2, 1, 8
+    centers = rng.normal(0.0, 1.0, size=(m.cfg.num_classes, m.cfg.feature_dim))
+    y = rng.integers(0, m.cfg.num_classes, (C, steps, B))
+    x = centers[y] + 0.4 * rng.normal(size=(C, steps, B, m.cfg.feature_dim))
+    ye = rng.integers(0, m.cfg.num_classes, 64)
+    xe = centers[ye] + 0.4 * rng.normal(size=(64, m.cfg.feature_dim))
+    train = {"x": jnp.asarray(x, jnp.float32), "y": jnp.asarray(y, jnp.int32)}
+    eval_batch = {"x": jnp.asarray(xe, jnp.float32), "y": jnp.asarray(ye, jnp.int32)}
+    return m, m.init(jax.random.key(seed)), train, eval_batch
+
+
+def bench_accuracy_vs_bytes(rounds: int, smoke: bool = False) -> list[str]:
     rows = []
-    for label, setup in (("resnet18_cifar10", _cnn_setup), ("qwen3_0_6b", _lm_setup)):
+    setups = (
+        (("head_office31", _head_setup),) if smoke
+        else (("resnet18_cifar10", _cnn_setup), ("qwen3_0_6b", _lm_setup))
+    )
+    for label, setup in setups:
         m, params, train, eval_batch = setup()
         for name, codec in CODECS.items():
             t0 = time.perf_counter()
@@ -168,16 +192,20 @@ def bench_kernel(fast: bool) -> list[str]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: tiny model, 2 rounds, small kernel shapes")
     ap.add_argument("--rounds", type=int, default=None)
     args = ap.parse_args()
-    rounds = args.rounds if args.rounds is not None else (3 if args.fast else 10)
+    rounds = args.rounds if args.rounds is not None else (
+        2 if args.smoke else 3 if args.fast else 10
+    )
 
     print("name,us_per_call,derived")
     for row in bench_wire_bytes():
         print(row)
-    for row in bench_accuracy_vs_bytes(rounds):
+    for row in bench_accuracy_vs_bytes(rounds, smoke=args.smoke):
         print(row)
-    for row in bench_kernel(args.fast):
+    for row in bench_kernel(args.fast or args.smoke):
         print(row)
 
 

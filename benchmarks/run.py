@@ -76,7 +76,7 @@ def bench_round_step() -> list[str]:
     w = jnp.ones(C); bud = jnp.full((C,), steps, jnp.int32)
 
     def run(p):
-        new, _, met = rs(p, (), batch, w, bud, 0)
+        new, _, _, met = rs(p, (), (), batch, w, bud, 0)
         return met["client_loss_mean"]
 
     us = _timeit(run, params, n=3)

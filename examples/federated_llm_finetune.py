@@ -44,10 +44,13 @@ round_step = jax.jit(make_round_step(
 weights = jnp.ones((args.clients,))
 budgets = jnp.full((args.clients,), args.local_steps, jnp.int32)
 state = strategy.init_state(params)
+client_state = ()  # NullCodec default: no codec-owned per-client state
 for rnd in range(1, args.rounds + 1):
     batch = lm_round_batch(
         n_clients=args.clients, steps=args.local_steps, batch_size=args.batch,
         seq_len=args.seq, vocab_size=cfg.vocab_size, seed=rnd,
     )
-    params, state, metrics = round_step(params, state, batch, weights, budgets, rnd)
+    params, state, client_state, metrics = round_step(
+        params, state, client_state, batch, weights, budgets, rnd
+    )
     print(f"round {rnd:2d}  mean client CE loss: {float(metrics['client_loss_mean']):.4f}")

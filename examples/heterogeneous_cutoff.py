@@ -4,13 +4,16 @@ processor-specific cutoff tau.
 A mixed GPU/CPU Jetson fleet trains ResNet (reduced) with FedAvg; then we set
 tau = the GPU fleet's round time, so CPU clients ship partial updates and the
 round wall-clock equalizes — trading a little accuracy for a 1.27x speedup.
+The same hardware facts drive per-device codec selection
+(``BandwidthCodecPolicy``): every client ships the wire its uplink can
+afford, and the History charges each one its actual payload bytes.
 
   PYTHONPATH=src python examples/heterogeneous_cutoff.py
 """
 import jax
 
 from repro.configs.resnet18_cifar10 import CNN_CONFIG
-from repro.core import FedTau, JaxClient, PROFILES, Server
+from repro.core import BandwidthCodecPolicy, FedTau, JaxClient, PROFILES, Server
 from repro.core.server import make_cost_model_for
 from repro.data.federated import dirichlet_partition
 from repro.data.synthetic import make_classification
@@ -27,9 +30,12 @@ profiles = [PROFILES["jetson-tx2-gpu"], PROFILES["jetson-tx2-cpu"]] * 2
 
 params = resnet.init_params(jax.random.key(0), cfg)
 clients = [JaxClient(client_id=s.client_id, loss_fn=loss_fn, dataset=s,
-                     batch_size=32) for s in shards]
+                     batch_size=32, device_profile=p.name)
+           for s, p in zip(shards, profiles)]
 cost_model = make_cost_model_for(params, profiles)
 spe = clients[0].steps_per_epoch()
+# slow uplinks sparsify, edge boards quantize (Jetson uplink=80Mbps -> Int8)
+policy = BandwidthCodecPolicy()
 
 for label, tau in [
     ("no cutoff (tau=0)", 0.0),
@@ -37,12 +43,14 @@ for label, tau in [
         "jetson-tx2-gpu", epochs=3, steps_per_epoch=spe)),
 ]:
     strat = FedTau(local_epochs=3, local_lr=0.05, tau_s=tau,
-                   cost_model=cost_model, steps_per_epoch=spe)
+                   cost_model=cost_model, steps_per_epoch=spe,
+                   codec_policy=policy)
     server = Server(strategy=strat, clients=clients, cost_model=cost_model)
     server.logger.quiet = True
     p0 = resnet.init_params(jax.random.key(0), cfg)
     _, hist = server.run(p0, num_rounds=3)
     budgets = strat.client_step_budgets(range(4))
+    comm_mb = sum(r.comm_bytes for r in hist.rounds) / 1e6
     print(f"{label:>24}: acc={hist.final_accuracy():.3f} "
           f"wall={hist.total_time_s/60:.2f}min energy={hist.total_energy_j/1e3:.1f}kJ "
-          f"step-budgets={budgets}")
+          f"comm={comm_mb:.1f}MB step-budgets={budgets}")

@@ -1,13 +1,17 @@
 """FL engine — the paper's contribution as a composable JAX module."""
 from .protocol import (
-    FitIns, FitRes, EvaluateIns, EvaluateRes, Parameters,
-    pytree_to_parameters, parameters_to_pytree,
+    FitIns, FitRes, EvaluateIns, EvaluateRes, Parameters, CompressedParameters,
+    ClientProperties, pytree_to_parameters, parameters_to_pytree,
+    compress_to_wire, wire_to_pytree,
 )
 from .client import Client, JaxClient
 from .server import Server, History, RoundRecord, make_cost_model_for
 from .cost_model import CostModel, DeviceProfile, PROFILES, AWS_DEVICE_FARM
-from .rounds import RoundSpec, make_round_step, make_client_update, init_residuals
-from .compression import Int8Codec, TopKCodec, NullCodec, compress_update, decompress_update
+from .rounds import RoundSpec, make_round_step, make_client_update
+from .compression import (
+    UpdateCodec, Int8Codec, TopKCodec, NullCodec, BandwidthCodecPolicy,
+    compress_update, decompress_update,
+)
 from .strategy import (
     Strategy, FedAvg, FedProx, FedTau, FedOpt, FedAdam, FedYogi, FedAvgM,
     STRATEGIES, tau_from_reference_processor,

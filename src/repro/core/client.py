@@ -1,10 +1,13 @@
 """FL clients — the paper's §4 on-device trainers, as JAX processes.
 
 ``Client`` mirrors the Flower client surface the paper describes (§4.1):
-``get_weights`` / ``fit`` / ``evaluate``.  ``JaxClient`` owns a local dataset
-shard + device profile and runs jitted local SGD; it honors the two config
-knobs the paper's server controls: ``epochs`` and the cutoff step budget
-``max_steps`` (tau).
+``get_weights`` / ``fit`` / ``evaluate`` / ``properties``.  ``JaxClient``
+owns a local dataset shard + device profile and runs jitted local SGD; it
+honors the server's config knobs: ``epochs``, the cutoff step budget
+``max_steps`` (tau), and the uplink ``codec``.  When a codec is configured
+the client ships a ``CompressedParameters`` delta payload (the actual
+encoded wire, not an fp32 pytree) and carries its error-feedback residual
+across rounds, mirroring the jitted engine's codec-owned client state.
 """
 from __future__ import annotations
 
@@ -17,9 +20,14 @@ import numpy as np
 
 from repro.data.federated import ClientDataset
 from repro.optim import Optimizer, sgd
-from repro.utils.pytree import tree_sq_norm, tree_sub, tree_where
+from repro.utils.pytree import tree_size, tree_sq_norm, tree_sub, tree_where
 
-from .protocol import EvaluateIns, EvaluateRes, FitIns, FitRes
+from .compression import compress_update
+from .cost_model import PROFILES
+from .protocol import (
+    ClientProperties, EvaluateIns, EvaluateRes, FitIns, FitRes,
+    compress_to_wire,
+)
 
 PyTree = Any
 
@@ -40,6 +48,17 @@ class Client:
     def evaluate(self, ins: EvaluateIns) -> EvaluateRes:
         raise NotImplementedError
 
+    def properties(self) -> ClientProperties:
+        """Device/network facts the server's codec + tau policies consume."""
+        return ClientProperties(client_id=-1)
+
+    def reset_state(self) -> None:
+        """Drop per-trajectory carry (e.g. error-feedback residuals).
+
+        The Server calls this at the start of every ``run`` so reused client
+        objects do not leak one experiment's compression state into the
+        next."""
+
 
 @dataclass
 class JaxClient(Client):
@@ -52,6 +71,7 @@ class JaxClient(Client):
     device_profile: str = "generic"
     _params: PyTree = None
     _fit_cache: dict = field(default_factory=dict, repr=False)
+    _residual: Any = field(default=None, repr=False)  # error-feedback carry
 
     def __post_init__(self):
         if self.optimizer is None:
@@ -59,6 +79,18 @@ class JaxClient(Client):
 
     def get_weights(self, config: dict) -> PyTree:
         return self._params
+
+    def properties(self) -> ClientProperties:
+        prof = PROFILES.get(self.device_profile)
+        return ClientProperties(
+            client_id=self.client_id,
+            device_profile=self.device_profile,
+            uplink_mbps=prof.uplink_mbps if prof else 20.0,
+            downlink_mbps=prof.downlink_mbps if prof else 50.0,
+        )
+
+    def reset_state(self) -> None:
+        self._residual = None
 
     def steps_per_epoch(self) -> int:
         return self.dataset.steps_per_epoch(self.batch_size)
@@ -121,14 +153,31 @@ class JaxClient(Client):
         )
         self._params = params
         steps_done = min(budget, full_steps)
+        metrics = {
+            "loss": float(mean_loss),
+            "steps_done": steps_done,
+            "device_profile": self.device_profile,
+        }
+
+        codec = cfg.get("codec")
+        if codec is not None:
+            # compressed uplink: encode the delta (plus the carried error-
+            # feedback residual) and ship the actual wire payload
+            n_params = tree_size(params)
+            residual = self._residual
+            if residual is None or residual.shape != (n_params,):
+                residual = jnp.zeros((n_params,), jnp.float32)
+            enc, self._residual = compress_update(
+                codec, params, ins.parameters, residual=residual
+            )
+            wire = compress_to_wire(codec, enc, n_params)
+            metrics["wire_bytes"] = wire.num_bytes
+            return FitRes(
+                parameters=wire, num_examples=len(self.dataset), metrics=metrics,
+            )
+
         return FitRes(
-            parameters=params,
-            num_examples=len(self.dataset),
-            metrics={
-                "loss": float(mean_loss),
-                "steps_done": steps_done,
-                "device_profile": self.device_profile,
-            },
+            parameters=params, num_examples=len(self.dataset), metrics=metrics,
         )
 
     def evaluate(self, ins: EvaluateIns) -> EvaluateRes:

@@ -1,4 +1,4 @@
-"""Update compression codecs — the compressed-wire round path's wire format.
+"""Update compression codecs — first-class citizens of every execution path.
 
 The paper measures communication as a first-class system cost; these codecs
 shrink the client->server payload that the cost model charges for:
@@ -9,22 +9,33 @@ shrink the client->server payload that the cost model charges for:
 - ``TopKCodec``: top-k sparsification with error feedback (classic gradient
   compression).
 - ``NullCodec``: identity fp32 wire — the uncompressed baseline with the
-  same interface, so the round engine has one code path.
+  same interface, and the *default* codec of ``RoundSpec``, so the round
+  engine has exactly one code path.
 
 Codecs operate on the *delta* (client params - global params), which is
-small-magnitude and quantizes well.  Two surfaces:
+small-magnitude and quantizes well.  The ``UpdateCodec`` base class defines
+the full surface the engine and protocol layer program against:
 
-- 1-D ``encode`` / ``decode`` on a single flat delta vector (the python-side
-  Server/Client path and unit tests);
-- batched ``encode_batch`` / ``decode_batch`` / ``reduce`` on a (C, N) delta
-  matrix — jit-/vmap-free row-block layout used inside the jitted round
-  step (core/rounds.py).  ``reduce`` consumes the *encoded* payload directly
-  so the Int8 weighted-mean itself never materializes the fp32 (C, N)
-  matrix (the round step still dequantizes once per round to compute the
-  error-feedback residual).
-
-``wire_bytes(n)`` is the per-client uplink charge the CostModel uses in
-place of raw ``tree_bytes`` (core/server.py, core/cost_model.py).
+- ``init_client_state(n_clients, n_params)`` — the codec-owned per-client
+  state pytree carried across rounds by ``round_step``.  Error-feedback
+  codecs return a (C, n_params) fp32 residual buffer; ``NullCodec`` returns
+  an empty pytree (no state is allocated for the uncompressed wire).
+- ``aggregate_batch(deltas, weights, state)`` — the batched (C, N) path
+  used inside the jitted parallel round step: fold the residual in, encode,
+  reduce straight off the *encoded* payload (for Int8 the fused
+  dequant+reduce kernel never materializes the fp32 (C, N) matrix), and
+  return the new residual state.
+- ``transmit_tree(delta_tree, state_row)`` — the per-client path used
+  inside the mesh ``shard_map`` manual region and the sequential scan:
+  what the server would decode from this one client's uplink, plus the
+  client's next state row.  ``NullCodec`` overrides it to the identity so
+  sharded models never round-trip through a flat replicated vector.
+- ``wire_payload(enc)`` / ``from_wire(payload)`` — the exact arrays that
+  cross the wire (Int8 trims encoder padding; the receiver re-pads), used
+  by the protocol layer's ``CompressedParameters`` serialization.
+- ``wire_bytes(n)`` — the per-client uplink charge; accepts an int or a
+  vector of per-client sizes so ``CostModel.round_costs`` can account for
+  a heterogeneous fleet where every client ships a different payload.
 """
 from __future__ import annotations
 
@@ -33,9 +44,11 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 from repro.utils.pytree import (
+    safe_weight_sum,
     tree_flatten_to_vector,
     tree_sub,
     tree_unflatten_from_vector,
@@ -44,12 +57,129 @@ from repro.utils.pytree import (
 PyTree = Any
 
 
-@dataclass(frozen=True)
-class NullCodec:
-    """Identity codec: full-precision fp32 wire (the uncompressed baseline)."""
+class UpdateCodec:
+    """Base codec: error-feedback residual state + flat-vector wire.
 
-    def wire_bytes(self, n_params: int) -> int:
+    Subclasses implement the wire format (``encode``/``decode`` and their
+    batched variants, ``reduce``, ``_wire_bytes_scalar``); the state and
+    transport machinery below is shared.  ``NullCodec`` overrides the state
+    hooks to be stateless/identity.
+    """
+
+    # ---- per-client state (carried by round_step across rounds) ----
+    def init_client_state(self, n_clients: int, n_params: int) -> PyTree:
+        """Zero error-feedback state: one flat fp32 residual per client."""
+        return jnp.zeros((n_clients, n_params), jnp.float32)
+
+    # ---- batched (C, N) surface: the jitted parallel round step ----
+    def aggregate_updates(
+        self, client_params: PyTree, global_params: PyTree,
+        weights: jnp.ndarray, state,
+    ):
+        """Full aggregation of vmapped client params -> (avg params, state).
+
+        Default: flatten per-client deltas to the (C, n_params) wire layout
+        and aggregate off the encoded payload (``aggregate_batch``).
+        ``NullCodec`` overrides this leafwise so the uncompressed engine
+        never materializes the flat fp32 matrix.
+        """
+        flat_global = tree_flatten_to_vector(global_params)
+        deltas = jax.vmap(
+            lambda p: tree_flatten_to_vector(p) - flat_global
+        )(client_params)
+        avg_delta, new_state = self.aggregate_batch(deltas, weights, state)
+        return (
+            tree_unflatten_from_vector(flat_global + avg_delta, global_params),
+            new_state,
+        )
+
+    def aggregate_batch(self, deltas: jnp.ndarray, weights: jnp.ndarray, state):
+        """(C, N) deltas + state -> (weighted-mean decoded delta (N,), new state).
+
+        Error feedback in, encode, reduce off the encoded payload; what was
+        not transmitted becomes the next residual, so the compression error
+        telescopes across rounds instead of accumulating.
+        """
+        eff = deltas + state
+        enc = self.encode_batch(eff)
+        new_state = eff - self.decode_batch(enc)
+        return self.reduce(enc, weights), new_state
+
+    # ---- per-client surface: mesh shard_map region / sequential scan ----
+    def transmit_tree(self, delta_tree: PyTree, state_row):
+        """One client's uplink: -> (decoded delta tree, new state row).
+
+        The returned tree contains exactly the information that survives the
+        wire (encode -> decode); the caller aggregates it, so only codec-
+        representable values ever cross the slow inter-pod links.
+        """
+        vec = tree_flatten_to_vector(delta_tree) + state_row
+        enc = self.encode(vec)
+        dec = self.decode(enc)
+        return tree_unflatten_from_vector(dec, delta_tree), vec - dec
+
+    # ---- wire serialization hooks (protocol.CompressedParameters) ----
+    def wire_payload(self, enc) -> dict:
+        """The exact fields that cross the wire (arrays + python scalars)."""
+        return dict(enc)
+
+    def from_wire(self, payload: dict) -> dict:
+        """Rebuild the decodable payload from ``wire_payload`` fields."""
+        return dict(payload)
+
+    # ---- uplink accounting ----
+    def _wire_bytes_scalar(self, n_params: int) -> int:
+        raise NotImplementedError
+
+    def wire_bytes(self, n_params):
+        """Uplink bytes for an ``n_params``-sized update.
+
+        Accepts an int (homogeneous fleet) or a sequence of per-client sizes
+        (heterogeneous accounting) and returns an int or list respectively.
+        """
+        if isinstance(n_params, (list, tuple, np.ndarray)):
+            return [self._wire_bytes_scalar(int(n)) for n in np.asarray(n_params).reshape(-1)]
+        return self._wire_bytes_scalar(int(n_params))
+
+
+@dataclass(frozen=True)
+class NullCodec(UpdateCodec):
+    """Identity codec: full-precision fp32 wire (the uncompressed baseline).
+
+    Stateless: ``init_client_state`` is empty, ``transmit_tree`` is the
+    identity on the delta pytree (no flatten — sharded sequential/fsdp
+    models keep their layout), and ``aggregate_batch`` is exactly the fused
+    weighted reduce of the uncompressed engine.
+    """
+
+    def _wire_bytes_scalar(self, n_params: int) -> int:
         return 4 * n_params
+
+    def init_client_state(self, n_clients: int, n_params: int) -> PyTree:
+        return ()
+
+    def aggregate_updates(self, client_params, global_params, weights, state):
+        """Leafwise fp32 weighted mean — the fp32 wire loses nothing, so the
+        uncompressed path never flattens the model into one (C, N) matrix
+        (same reasoning as the identity ``transmit_tree``)."""
+        wf = weights.astype(jnp.float32)
+        wsum = safe_weight_sum(wf)
+
+        def leaf_mean(xs, g):
+            wshape = (xs.shape[0],) + (1,) * (xs.ndim - 1)
+            gf = g.astype(jnp.float32)
+            acc = jnp.sum(
+                (xs.astype(jnp.float32) - gf) * wf.reshape(wshape), axis=0
+            )
+            return (gf + acc / wsum).astype(g.dtype)
+
+        return jax.tree.map(leaf_mean, client_params, global_params), ()
+
+    def aggregate_batch(self, deltas, weights, state):
+        return self.reduce(self.encode_batch(deltas), weights), ()
+
+    def transmit_tree(self, delta_tree, state_row):
+        return delta_tree, ()
 
     def encode(self, delta_vec: jnp.ndarray):
         return {"delta": delta_vec.astype(jnp.float32), "n": delta_vec.shape[0]}
@@ -68,13 +198,13 @@ class NullCodec:
 
 
 @dataclass(frozen=True)
-class Int8Codec:
+class Int8Codec(UpdateCodec):
     block: int = 256
 
     def _n_scales(self, n_params: int) -> int:
         return -(-n_params // self.block)  # ceil: encode pads to a block multiple
 
-    def wire_bytes(self, n_params: int) -> int:
+    def _wire_bytes_scalar(self, n_params: int) -> int:
         # int8 payload (pad blocks need not cross the wire: the receiver
         # re-pads from n) + one fp32 scale per ceil(n/block) block
         return n_params + 4 * self._n_scales(n_params)
@@ -89,6 +219,19 @@ class Int8Codec:
     def decode(self, enc) -> jnp.ndarray:
         vec = ops.dequantize_int8(enc["q"], enc["scale"], block=self.block)
         return vec[: enc["n"]]
+
+    def wire_payload(self, enc) -> dict:
+        # pad int8s never cross the wire: trim to n, the receiver re-pads
+        return {"q": enc["q"][: enc["n"]], "scale": enc["scale"], "n": enc["n"]}
+
+    def from_wire(self, payload: dict) -> dict:
+        n = payload["n"]
+        q = jnp.asarray(payload["q"])
+        return {
+            "q": jnp.pad(q, (0, (-n) % self.block)),
+            "scale": jnp.asarray(payload["scale"]),
+            "n": n,
+        }
 
     # ---- batched (C, N) wire path used inside the jitted round step ----
     def encode_batch(self, deltas: jnp.ndarray):
@@ -125,7 +268,7 @@ class Int8Codec:
 
 
 @dataclass(frozen=True)
-class TopKCodec:
+class TopKCodec(UpdateCodec):
     """Keep the k largest-|.| entries; the residual feeds back next round."""
 
     frac: float = 0.01
@@ -133,7 +276,7 @@ class TopKCodec:
     def k_of(self, n_params: int) -> int:
         return max(1, int(n_params * self.frac))
 
-    def wire_bytes(self, n_params: int) -> int:
+    def _wire_bytes_scalar(self, n_params: int) -> int:
         return self.k_of(n_params) * 8  # int32 index + fp32 value
 
     def encode(self, delta_vec: jnp.ndarray):
@@ -163,14 +306,45 @@ class TopKCodec:
         return ops.fedavg_reduce(self.decode_batch(enc), weights, interpret=interpret)
 
 
+@dataclass(frozen=True)
+class BandwidthCodecPolicy:
+    """Per-device codec selection from the client's measured uplink.
+
+    The Strategy consults this in ``configure_fit`` (the paper's system-cost
+    quantification driving an algorithmic decision): slow phone-class
+    uplinks get TopK sparsification, mid-tier edge boards get Int8, and
+    datacenter-class backbone links ship the full-precision wire.
+    """
+
+    topk_below_mbps: float = 30.0       # Pixel-class cellular uplinks
+    null_above_mbps: float = 100_000.0  # TPU-class datacenter backbone
+    topk: TopKCodec = TopKCodec(frac=0.01)
+    int8: Int8Codec = Int8Codec()
+    null: NullCodec = NullCodec()
+
+    def codec_for(self, properties) -> UpdateCodec:
+        """properties: protocol.ClientProperties (or any .uplink_mbps owner)."""
+        if properties.uplink_mbps >= self.null_above_mbps:
+            return self.null
+        if properties.uplink_mbps < self.topk_below_mbps:
+            return self.topk
+        return self.int8
+
+
 def compress_update(
-    codec, new_params: PyTree, global_params: PyTree
+    codec, new_params: PyTree, global_params: PyTree, residual=None
 ) -> tuple[Any, PyTree]:
-    """-> (wire_payload, residual_vec) for error feedback."""
+    """-> (wire_payload, new_residual) for error feedback.
+
+    ``residual`` is the client's carried error-feedback vector (folded into
+    the delta before encoding); None means no carried state.
+    """
     delta = tree_flatten_to_vector(tree_sub(new_params, global_params))
+    if residual is not None:
+        delta = delta + residual
     enc = codec.encode(delta)
-    residual = delta - codec.decode(enc)
-    return enc, residual
+    new_residual = delta - codec.decode(enc)
+    return enc, new_residual
 
 
 def decompress_update(codec, enc, global_params: PyTree) -> PyTree:

@@ -135,19 +135,40 @@ class CostModel:
         steps_per_client: list[int],
         *,
         payload_bytes: int | None = None,
-        uplink_bytes: int | None = None,
+        uplink_bytes: int | list[int] | None = None,
     ) -> list[ClientCost]:
+        """Per-client costs for one round.
+
+        ``uplink_bytes`` may be a single size (homogeneous fleet) or a
+        vector with one wire size per client — the per-device codec path
+        ships a different payload from every device class.
+        """
+        ups = self._per_client(uplink_bytes, len(steps_per_client))
         return [
             self.client_round_cost(
-                cid, s, payload_bytes=payload_bytes, uplink_bytes=uplink_bytes
+                cid, s, payload_bytes=payload_bytes, uplink_bytes=up
             )
-            for cid, s in enumerate(steps_per_client)
+            for (cid, s), up in zip(enumerate(steps_per_client), ups)
         ]
 
-    def round_comm_bytes(self, n_clients: int, *, uplink_bytes: int | None = None) -> int:
+    @staticmethod
+    def _per_client(uplink_bytes, n_clients: int) -> list[int | None]:
+        if uplink_bytes is None or isinstance(uplink_bytes, (int, np.integer)):
+            return [uplink_bytes] * n_clients
+        assert len(uplink_bytes) == n_clients, (
+            f"per-client uplink vector ({len(uplink_bytes)}) != clients ({n_clients})"
+        )
+        return [int(u) for u in uplink_bytes]
+
+    def round_comm_bytes(
+        self, n_clients: int, *, uplink_bytes: int | list[int] | None = None
+    ) -> int:
         """Total bytes crossing the network this round (up + down, all clients)."""
-        up = self.update_bytes if uplink_bytes is None else uplink_bytes
-        return (up + self.update_bytes) * n_clients
+        ups = self._per_client(uplink_bytes, n_clients)
+        return sum(
+            (self.update_bytes if up is None else up) + self.update_bytes
+            for up in ups
+        )
 
     def round_wall_time(self, costs: list[ClientCost]) -> float:
         """Synchronous FedAvg: the round ends when the slowest client reports."""

@@ -6,10 +6,25 @@ local epochs, or a cutoff time tau).  We keep the message *shape* —
 FitIns/FitRes/EvaluateIns/EvaluateRes with an opaque config mapping — and the
 parameter serialization round-trip, while transport is in-process
 (DESIGN.md §7.2).
+
+Two wire formats for parameters:
+
+- ``Parameters``: the full-precision pytree wire (list of raw ndarray
+  buffers + dtype/shape manifest) — what FitIns downlinks carry.
+- ``CompressedParameters``: a codec-encoded *delta* payload (the serialized
+  output of ``codec.encode`` via ``codec.wire_payload``, so e.g. Int8
+  encoder padding never crosses the wire).  ``FitRes.parameters`` carries
+  this on the compressed uplink; ``Strategy.aggregate_fit`` decodes it
+  against the round's global parameters.  ``num_bytes`` is the actual
+  payload size — by construction equal to ``codec.wire_bytes(n_params)`` —
+  which is what the Server charges the CostModel per client.
+
+Transport is in-process, so ``CompressedParameters`` carries the codec
+instance itself; an RPC deployment would replace that field with a codec
+registry key plus its config, leaving the payload bytes unchanged.
 """
 from __future__ import annotations
 
-import io
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -17,6 +32,25 @@ import jax
 import numpy as np
 
 PyTree = Any
+
+
+# ---------------- ndarray buffer codec (shared by both wire formats) ----------------
+def _encode_array(arr: np.ndarray) -> tuple[bytes, str, tuple[int, ...]]:
+    """-> (raw buffer, dtype name, shape); bfloat16 ships as a uint16 view
+    (it has no portable buffer protocol)."""
+    arr = np.asarray(arr)
+    if arr.dtype.name == "bfloat16":
+        return arr.view(np.uint16).tobytes(), "bfloat16", tuple(arr.shape)
+    return arr.tobytes(), arr.dtype.name, tuple(arr.shape)
+
+
+def _decode_array(buf: bytes, dtype: str, shape: tuple[int, ...]):
+    import jax.numpy as jnp
+
+    if dtype == "bfloat16":
+        arr = np.frombuffer(buf, dtype=np.uint16).reshape(shape)
+        return jnp.asarray(arr).view(jnp.bfloat16)
+    return jnp.asarray(np.frombuffer(buf, dtype=dtype).reshape(shape))
 
 
 # ---------------- parameter wire format ----------------
@@ -33,34 +67,75 @@ class Parameters:
 
 
 def pytree_to_parameters(tree: PyTree) -> Parameters:
-    leaves = jax.tree.leaves(tree)
     tensors, manifest = [], []
-    for leaf in leaves:
-        arr = np.asarray(leaf)
-        # bfloat16 has no portable buffer protocol: ship as uint16 view
-        if arr.dtype.name == "bfloat16":
-            raw = arr.view(np.uint16)
-            tensors.append(raw.tobytes())
-            manifest.append(("bfloat16", tuple(arr.shape)))
-        else:
-            tensors.append(arr.tobytes())
-            manifest.append((arr.dtype.name, tuple(arr.shape)))
+    for leaf in jax.tree.leaves(tree):
+        buf, dtype, shape = _encode_array(leaf)
+        tensors.append(buf)
+        manifest.append((dtype, shape))
     return Parameters(tensors=tensors, manifest=manifest)
 
 
 def parameters_to_pytree(params: Parameters, like: PyTree) -> PyTree:
-    import jax.numpy as jnp
-
     leaves, treedef = jax.tree.flatten(like)
     assert len(leaves) == len(params.tensors), "wire/client structure mismatch"
-    out = []
-    for buf, (dtype, shape), leaf in zip(params.tensors, params.manifest, leaves):
-        if dtype == "bfloat16":
-            arr = np.frombuffer(buf, dtype=np.uint16).reshape(shape)
-            out.append(jnp.asarray(arr).view(jnp.bfloat16))
-        else:
-            out.append(jnp.asarray(np.frombuffer(buf, dtype=dtype).reshape(shape)))
+    out = [
+        _decode_array(buf, dtype, shape)
+        for buf, (dtype, shape) in zip(params.tensors, params.manifest)
+    ]
     return jax.tree.unflatten(treedef, out)
+
+
+# ---------------- compressed-delta wire format ----------------
+@dataclass
+class CompressedParameters:
+    """A codec-encoded delta payload: what the compressed uplink carries.
+
+    ``tensors``/``manifest`` serialize the array fields of the codec's wire
+    payload (named by ``fields``); python scalars (e.g. the unpadded length
+    ``n``) ride in ``aux``.  Decode against the global params the client
+    trained from: ``global + codec.decode(payload)``.
+    """
+
+    codec: Any                                   # UpdateCodec (registry key in RPC)
+    tensors: list[bytes]
+    manifest: list[tuple[str, tuple[int, ...]]]  # (dtype_str, shape)
+    fields: list[str]                            # payload dict key per tensor
+    aux: dict = field(default_factory=dict)      # non-array payload fields
+    n_params: int = 0
+
+    @property
+    def num_bytes(self) -> int:
+        """Actual uplink payload size (== codec.wire_bytes(n_params))."""
+        return sum(len(t) for t in self.tensors)
+
+
+def compress_to_wire(codec, enc, n_params: int) -> CompressedParameters:
+    """Serialize a ``codec.encode`` payload into the uplink wire object."""
+    payload = codec.wire_payload(enc)
+    tensors, manifest, fields, aux = [], [], [], {}
+    for key, value in payload.items():
+        if isinstance(value, (int, float)):
+            aux[key] = value
+            continue
+        buf, dtype, shape = _encode_array(value)
+        tensors.append(buf)
+        manifest.append((dtype, shape))
+        fields.append(key)
+    return CompressedParameters(
+        codec=codec, tensors=tensors, manifest=manifest, fields=fields,
+        aux=aux, n_params=n_params,
+    )
+
+
+def wire_to_pytree(cp: CompressedParameters, global_params: PyTree) -> PyTree:
+    """Decode a compressed uplink against the round's global parameters."""
+    from .compression import decompress_update
+
+    payload = dict(cp.aux)
+    for key, buf, (dtype, shape) in zip(cp.fields, cp.tensors, cp.manifest):
+        payload[key] = _decode_array(buf, dtype, shape)
+    enc = cp.codec.from_wire(payload)
+    return decompress_update(cp.codec, enc, global_params)
 
 
 # ---------------- messages ----------------
@@ -72,7 +147,7 @@ class FitIns:
 
 @dataclass
 class FitRes:
-    parameters: Parameters | PyTree               # updated params (or delta)
+    parameters: Parameters | CompressedParameters | PyTree  # update (or delta)
     num_examples: int
     metrics: dict = field(default_factory=dict)  # incl. steps_done, t_compute_s
 
@@ -92,7 +167,7 @@ class EvaluateRes:
 
 @dataclass
 class ClientProperties:
-    """What the RPC layer knows about a device (drives tau assignment)."""
+    """What the RPC layer knows about a device (drives tau + codec choice)."""
 
     client_id: int
     device_profile: str = "generic"

@@ -1,38 +1,54 @@
 """Jit-able FL round step — the pod-scale realization of the paper's FL loop.
 
 One ``round_step`` = every sampled client runs (up to) ``max_steps`` local
-SGD steps from the current global model, then the Strategy aggregates.  Two
-mesh mappings (DESIGN.md §4):
+SGD steps from the current global model, then the Strategy aggregates.  All
+execution modes share ONE uniform contract::
 
-- **parallel**: params/batches carry a leading client axis C sharded over the
-  mesh's client axes ((pod,) data); local training is vmapped over clients;
-  aggregation is a cross-client weighted reduction (an all-reduce over the
-  client axes at the XLA level).
+    round_step(global_params, server_state, client_state, batches, weights,
+               step_budgets, rnd)
+        -> (new_global, new_server_state, new_client_state, metrics)
+
+``client_state`` is a codec-owned pytree
+(``spec.codec.init_client_state(n_clients, n_params)``): error-feedback
+codecs carry a (C, n_params) fp32 residual buffer so the compression error
+telescopes across rounds; ``NullCodec`` — the default — carries an empty
+pytree, so the uncompressed engine allocates no client state at all.  The
+same signature holds whether or not anything is compressed: there is no
+forked "compressed round step" anymore.
+
+Three mesh mappings (DESIGN.md §4), every one codec-aware:
+
+- **parallel** (no mesh): params/batches carry a leading client axis C;
+  local training is vmapped over clients; per-client flat deltas (plus the
+  carried residual) are encoded and the server aggregates straight off the
+  encoded payload (``codec.aggregate_batch`` — for Int8 the fused
+  dequantize+weighted-reduce Pallas kernel: one HBM pass over the int8
+  payload).
+- **parallel + mesh**: clients map 1:1 onto ``client_axes`` via shard_map
+  (manual over client axes, auto over model axes).  Each client's delta is
+  encoded *before* the hierarchical cross-client/cross-pod psum — the slow
+  inter-pod links are exactly where wire shrinkage pays — so the values
+  crossing the links carry only codec-representable information
+  (``codec.transmit_tree``: encode -> decode inside the manual region; the
+  psum operand is the decoded payload, numerically identical to the server
+  decoding every client's uplink).
 - **sequential**: one client at a time occupies the whole mesh (scan over
-  clients); the aggregate is an accumulated weighted delta.  Used for archs
-  whose per-client replica cannot fit (mixtral, jamba).
+  clients); each client's delta goes through the codec round-trip before
+  entering the accumulated weighted delta, and the per-client state rows
+  are scanned alongside.  ``NullCodec``'s identity ``transmit_tree`` keeps
+  the bf16 dense accumulator and never flattens a sharded model.  Caveat:
+  an error-feedback codec here allocates its unsharded (C, n_params) fp32
+  state and a replicated flat delta per scan step — fine for models whose
+  flat update fits on one host, NOT for the multi-B fsdp archs this mode
+  exists for (sharded codec state is a ROADMAP open item).
 
 The paper's tau-cutoff becomes a *per-client step budget* ``step_budgets``
 (int (C,)): clients keep stepping while ``i < budget_c`` and freeze their
 parameters afterwards — shape-static, mask-realized partial work.
-
-**Compressed wire** (``RoundSpec.codec``): when a codec (core/compression.py)
-is set, the parallel round step encodes each client's flat delta *inside the
-jitted step* — delta + carried error-feedback residual -> codec payload —
-and the server decodes through the codec's fused reduce (for Int8 the
-dequantize+weighted-reduce Pallas kernel: one HBM pass over the int8
-payload).  What was not transmitted (quantization error / untransmitted
-top-k mass) becomes the client's new residual, carried across rounds as a
-(C, n_params) leaf of the client state pytree (``init_residuals``), so the
-compression error telescopes instead of accumulating.  The compressed round
-step takes that residual state after ``server_state`` and returns its
-updated value: ``round_step(global, server_state, residuals, batches,
-weights, budgets, rnd) -> (new_global, new_server_state, new_residuals,
-metrics)``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable
 
@@ -40,8 +56,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim import Optimizer
-from repro.utils.pytree import tree_where
+from repro.utils.pytree import safe_weight_sum, tree_where
 
+from .compression import NullCodec
 from .strategy.base import Strategy
 
 PyTree = Any
@@ -55,7 +72,7 @@ class RoundSpec:
     execution_mode: str          # "parallel" | "sequential" | "fsdp"
     prox_mu: float = 0.0         # FedProx proximal coefficient (0 = off)
     microbatches: int = 1        # gradient accumulation within one local step
-    codec: Any = None            # UpdateCodec -> compressed-wire round path
+    codec: Any = field(default_factory=NullCodec)  # UpdateCodec (wire format)
 
 
 def make_client_update(
@@ -141,6 +158,31 @@ def make_client_update(
     return client_update
 
 
+def _shard_map(f, mesh, in_specs, out_specs, axis_names):
+    """shard_map across jax versions: manual over ``axis_names`` (the client
+    axes), automatic over every other mesh axis (the model axes) — the
+    top-level API when present, else the jax.experimental fallback, whose
+    ``auto=`` set expresses the same manual/auto split."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as sm
+
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False, auto=auto)
+
+
+def _state_metrics(new_client_state) -> dict:
+    """Residual-norm telemetry when the codec carries per-client state."""
+    if not jax.tree.leaves(new_client_state):
+        return {}
+    res = jax.tree.leaves(new_client_state)[0]
+    return {"residual_norm_mean": jnp.mean(jnp.linalg.norm(res, axis=-1))}
+
+
 def make_round_step(
     loss_fn: Callable,
     opt: Optimizer,
@@ -151,66 +193,79 @@ def make_round_step(
     client_axes: tuple[str, ...] = ("data",),
     param_shardings: PyTree | None = None,
 ):
-    """Builds round_step(global_params, server_state, batches, weights,
-    step_budgets, rnd) -> (new_global, new_server_state, metrics).
+    """Builds the uniform round_step (module docstring) for ``spec``.
 
-    parallel:   batches leaves (C, max_steps, B, ...); weights/budgets (C,).
-                With a mesh, clients map 1:1 onto `client_axes` via shard_map
-                (manual over client axes, auto over the model axes) so local
-                training is provably communication-free across clients and
-                aggregation is an explicit — hierarchical when multi-pod —
-                cross-client psum.  Without a mesh (CPU tests) it vmaps.
+    parallel:   batches leaves (C, max_steps, B, ...); weights/budgets (C,);
+                client_state leaves lead with C.  With a mesh, clients map
+                1:1 onto `client_axes` via shard_map; without one (CPU
+                tests) local training vmaps over clients.
     sequential: identical signature; clients are scanned, not mapped.
+
+    Aggregation is codec-mediated on every path: the weighted mean of the
+    codec-decoded deltas feeds ``strategy.server_update`` (FedAvg-family:
+    identity; FedOpt: server optimizer on the pseudo-gradient).
     """
     client_update = make_client_update(loss_fn, opt, spec, trainable_mask)
-
-    if spec.codec is not None:
-        if spec.execution_mode != "parallel" or mesh is not None:
-            raise NotImplementedError(
-                "codec is only supported on the single-host parallel round "
-                "path for now (mesh shard_map / sequential: ROADMAP open item)"
-            )
-        return _make_compressed_round_step(client_update, strategy, spec)
+    codec = spec.codec if spec.codec is not None else NullCodec()
 
     if spec.execution_mode == "parallel" and mesh is not None:
         from jax.sharding import PartitionSpec as P
 
         axes = client_axes
 
-        def per_client(global_params, batches, weight, budget):
+        def per_client(global_params, batches, weight, budget, state):
             b0 = jax.tree.map(lambda x: x[0], batches)
             new_p, loss, steps = client_update(global_params, b0, budget[0])
 
-            wf = weight[0].astype(jnp.float32)
+            # this client's uplink: encode the delta BEFORE anything crosses
+            # the mesh — only codec-representable values enter the psum
+            delta = jax.tree.map(
+                lambda n, g: n.astype(jnp.float32) - g.astype(jnp.float32),
+                new_p, global_params,
+            )
+            state_row = jax.tree.map(lambda x: x[0], state)
+            dec_delta, new_row = codec.transmit_tree(delta, state_row)
 
-            def wmean(n, g):
-                wx = n.astype(jnp.float32) * wf
+            wf = weight[0].astype(jnp.float32)
+            wsum = wf
+            for ax in reversed(axes):
+                wsum = jax.lax.psum(wsum, ax)
+            wsum = jnp.where(wsum == 0.0, 1.0, wsum)  # safe_weight_sum, post-psum
+
+            def wmean(d):
+                wx = d.astype(jnp.float32) * wf
                 # hierarchical aggregation: reduce inside the pod first, then
                 # across pods (one pre-reduced tensor crosses the slow links)
                 for ax in reversed(axes):
                     wx = jax.lax.psum(wx, ax)
-                return wx
+                return wx / wsum
 
-            wsum = wf
-            for ax in reversed(axes):
-                wsum = jax.lax.psum(wsum, ax)
             avg = jax.tree.map(
-                lambda n, g: (wmean(n, g) / wsum).astype(g.dtype),
-                new_p, global_params,
+                lambda g, d: (g.astype(jnp.float32) + wmean(d)).astype(g.dtype),
+                global_params, dec_delta,
             )
-            return avg, loss[None], steps[None]
+            return avg, loss[None], steps[None], jax.tree.map(
+                lambda x: x[None], new_row
+            )
 
-        def round_step(global_params, server_state, batches, weights, step_budgets, rnd):
+        def round_step(
+            global_params, server_state, client_state, batches, weights,
+            step_budgets, rnd,
+        ):
             batch_specs = jax.tree.map(lambda x: P(axes), batches)
             param_specs_manual = jax.tree.map(lambda x: P(), global_params)
-            avg, losses, steps = jax.shard_map(
+            state_specs = jax.tree.map(
+                lambda x: P(axes, *([None] * (x.ndim - 1))), client_state
+            )
+            avg, losses, steps, new_client_state = _shard_map(
                 per_client,
-                mesh=mesh,
-                in_specs=(param_specs_manual, batch_specs, P(axes), P(axes)),
-                out_specs=(param_specs_manual, P(axes), P(axes)),
+                mesh,
+                in_specs=(
+                    param_specs_manual, batch_specs, P(axes), P(axes), state_specs,
+                ),
+                out_specs=(param_specs_manual, P(axes), P(axes), state_specs),
                 axis_names=set(axes),
-                check_vma=False,
-            )(global_params, batches, weights, step_budgets)
+            )(global_params, batches, weights, step_budgets, client_state)
             new_global, new_state = strategy.server_update(
                 avg, global_params, server_state, rnd
             )
@@ -218,26 +273,37 @@ def make_round_step(
                 "client_loss_mean": jnp.mean(losses),
                 "client_loss_max": jnp.max(losses),
                 "steps_total": jnp.sum(steps),
+                **_state_metrics(new_client_state),
             }
-            return new_global, new_state, metrics
+            return new_global, new_state, new_client_state, metrics
 
         return round_step
 
     if spec.execution_mode == "parallel":
 
-        def round_step(global_params, server_state, batches, weights, step_budgets, rnd):
+        def round_step(
+            global_params, server_state, client_state, batches, weights,
+            step_budgets, rnd,
+        ):
             new_params, losses, steps = jax.vmap(
                 client_update, in_axes=(None, 0, 0)
             )(global_params, batches, step_budgets)
-            new_global, new_state = strategy.aggregate(
-                new_params, weights, global_params, server_state, rnd
+
+            # codec-owned aggregation: wire layout + encoded-payload reduce
+            # for compressing codecs, a leafwise weighted mean for NullCodec
+            avg_params, new_client_state = codec.aggregate_updates(
+                new_params, global_params, weights, client_state
+            )
+            new_global, new_state = strategy.server_update(
+                avg_params, global_params, server_state, rnd
             )
             metrics = {
                 "client_loss_mean": jnp.mean(losses),
                 "client_loss_max": jnp.max(losses),
                 "steps_total": jnp.sum(steps),
+                **_state_metrics(new_client_state),
             }
-            return new_global, new_state, metrics
+            return new_global, new_state, new_client_state, metrics
 
         return round_step
 
@@ -249,32 +315,44 @@ def make_round_step(
             return tree
         return jax.lax.with_sharding_constraint(tree, param_shardings)
 
-    def round_step(global_params, server_state, batches, weights, step_budgets, rnd):
+    def round_step(
+        global_params, server_state, client_state, batches, weights,
+        step_budgets, rnd,
+    ):
         wf = weights.astype(jnp.float32)
-        wsum = jnp.sum(wf)
+        wsum = safe_weight_sum(wf)
 
         def per_client(carry, xs):
-            delta_acc, loss_acc, steps_acc = carry
-            client_batches, w, budget = xs
+            delta_acc, loss_acc, loss_max, steps_acc = carry
+            client_batches, w, budget, state_row = xs
             new_params, loss, steps = client_update(
                 global_params, client_batches, budget
             )
+            delta = jax.tree.map(jnp.subtract, new_params, global_params)
+            # codec round-trip: only what survives the wire is accumulated
+            dec_delta, new_row = codec.transmit_tree(delta, state_row)
             scale = (w / wsum).astype(jnp.bfloat16)
             delta_acc = _pin(jax.tree.map(
-                lambda acc, n, g: acc + scale * (n - g).astype(jnp.bfloat16),
-                delta_acc, new_params, global_params,
+                lambda acc, d: acc + scale * d.astype(jnp.bfloat16),
+                delta_acc, dec_delta,
             ))
-            return (delta_acc, loss_acc + loss * w / wsum, steps_acc + steps), None
+            carry = (
+                delta_acc,
+                loss_acc + loss * w / wsum,
+                jnp.maximum(loss_max, loss),
+                steps_acc + steps,
+            )
+            return carry, new_row
 
         # bf16 delta accumulator: halves the largest param-state buffer; the
         # single-round accumulation error is far below local-SGD noise
         zero_delta = _pin(jax.tree.map(
             lambda g: jnp.zeros(g.shape, jnp.bfloat16), global_params
         ))
-        (delta, loss_mean, steps_total), _ = jax.lax.scan(
+        (delta, loss_mean, loss_max, steps_total), new_client_state = jax.lax.scan(
             per_client,
-            (zero_delta, jnp.zeros(()), jnp.zeros((), jnp.int32)),
-            (batches, wf, step_budgets),
+            (zero_delta, jnp.zeros(()), jnp.full((), -jnp.inf), jnp.zeros((), jnp.int32)),
+            (batches, wf, step_budgets, client_state),
         )
         # the averaged delta goes straight through server_update (FedAvg:
         # identity; FedOpt: server optimizer) — no stacked fp32 detour.
@@ -287,64 +365,10 @@ def make_round_step(
         )
         metrics = {
             "client_loss_mean": loss_mean,
-            "client_loss_max": loss_mean,
+            "client_loss_max": loss_max,
             "steps_total": steps_total,
+            **_state_metrics(new_client_state),
         }
-        return new_global, new_state, metrics
-
-    return round_step
-
-
-def init_residuals(global_params: PyTree, n_clients: int) -> jnp.ndarray:
-    """Zero error-feedback state for the compressed round path: one flat
-    fp32 residual vector per client, (C, n_params)."""
-    from repro.utils.pytree import tree_size
-
-    return jnp.zeros((n_clients, tree_size(global_params)), jnp.float32)
-
-
-def _make_compressed_round_step(client_update, strategy: Strategy, spec: RoundSpec):
-    """Compressed-wire parallel round step (see module docstring).
-
-    Per round: vmap local training, flatten per-client deltas, add the
-    carried residual, encode with ``spec.codec``, aggregate straight off the
-    encoded payload (``codec.reduce`` — the fused dequant+reduce kernel for
-    Int8), and keep ``delta - decode(payload)`` as the next residual.
-    """
-    from repro.utils.pytree import tree_flatten_to_vector, tree_unflatten_from_vector
-
-    codec = spec.codec
-
-    def round_step(
-        global_params, server_state, residuals, batches, weights, step_budgets, rnd
-    ):
-        new_params, losses, steps = jax.vmap(
-            client_update, in_axes=(None, 0, 0)
-        )(global_params, batches, step_budgets)
-
-        flat_global = tree_flatten_to_vector(global_params)
-        deltas = jax.vmap(
-            lambda p: tree_flatten_to_vector(p) - flat_global
-        )(new_params)                                     # (C, n_params) fp32
-        deltas = deltas + residuals                       # error feedback in
-        enc = codec.encode_batch(deltas)                  # the wire payload
-        new_residuals = deltas - codec.decode_batch(enc)  # untransmitted mass
-
-        avg_delta = codec.reduce(enc, weights)            # fused server decode
-        avg_params = tree_unflatten_from_vector(
-            flat_global + avg_delta, global_params
-        )
-        new_global, new_state = strategy.server_update(
-            avg_params, global_params, server_state, rnd
-        )
-        metrics = {
-            "client_loss_mean": jnp.mean(losses),
-            "client_loss_max": jnp.max(losses),
-            "steps_total": jnp.sum(steps),
-            "residual_norm_mean": jnp.mean(
-                jnp.linalg.norm(new_residuals, axis=1)
-            ),
-        }
-        return new_global, new_state, new_residuals, metrics
+        return new_global, new_state, new_client_state, metrics
 
     return round_step

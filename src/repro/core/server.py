@@ -19,7 +19,7 @@ from repro.utils.pytree import tree_bytes, tree_size
 
 from .client import Client
 from .cost_model import CostModel
-from .protocol import EvaluateIns, FitIns
+from .protocol import CompressedParameters, EvaluateIns, FitIns, Parameters
 from .strategy.base import Strategy
 
 PyTree = Any
@@ -85,9 +85,14 @@ class Server:
     def run(self, global_params: PyTree, num_rounds: int) -> tuple[PyTree, History]:
         history = History()
         client_ids = list(range(len(self.clients)))
+        client_props = {cid: self.clients[cid].properties() for cid in client_ids}
+        for c in self.clients:  # fresh trajectory: no residual carry-over
+            c.reset_state()
 
         for rnd in range(1, num_rounds + 1):
-            fit_ins = self.strategy.configure_fit(rnd, global_params, client_ids)
+            fit_ins = self.strategy.configure_fit(
+                rnd, global_params, client_ids, client_properties=client_props
+            )
 
             results, steps_per_client = [], []
             for cid, ins in fit_ins:
@@ -95,16 +100,21 @@ class Server:
                 results.append((cid, res))
                 steps_per_client.append(int(res.metrics.get("steps_done", 1)))
 
+            # per-client uplink charge: the actual wire payload each client
+            # shipped (heterogeneous codecs => heterogeneous sizes), BEFORE
+            # the aggregate moves global_params past this round's baseline
+            uplink = (
+                self._uplink_bytes(results, global_params)
+                if self.cost_model is not None else None
+            )
+
             global_params = self.strategy.aggregate_fit(rnd, results, global_params)
 
             # ---- system-cost accounting (the paper's §5 measurement) ----
-            # uplink is charged at the codec's wire size (compressed-wire
+            # uplink is charged at each client's wire size (compressed-wire
             # path); the downlink stays the full-precision global model.
             wall, energy, comm = 0.0, 0.0, 0
             if self.cost_model is not None:
-                uplink = None
-                if self.codec is not None:
-                    uplink = self.codec.wire_bytes(tree_size(global_params))
                 costs = self.cost_model.round_costs(
                     steps_per_client, uplink_bytes=uplink
                 )
@@ -114,11 +124,12 @@ class Server:
                     len(results), uplink_bytes=uplink
                 )
 
+            losses = [r.metrics.get("loss", 0.0) for _, r in results]
+            ns = [r.num_examples for _, r in results]
+            # all-zero example counts (empty shards / failed reads) must not
+            # crash np.average with a ZeroDivisionError: unweighted fallback
             train_loss = float(
-                np.average(
-                    [r.metrics.get("loss", 0.0) for _, r in results],
-                    weights=[r.num_examples for _, r in results],
-                )
+                np.average(losses, weights=ns) if sum(ns) > 0 else np.mean(losses)
             )
 
             eval_loss = eval_acc = None
@@ -137,6 +148,34 @@ class Server:
                 wall_s=wall, energy_kj=energy / 1e3,
             )
         return global_params, history
+
+    def _uplink_bytes(self, results, global_params) -> list[int] | None:
+        """Per-client uplink sizes for cost accounting.
+
+        Wire-format payloads (Parameters/CompressedParameters) are charged
+        at their actual serialized size; raw-pytree payloads fall back to
+        the server-level codec's wire size, or None (the cost model's
+        full-precision default) when no codec is configured anywhere.
+        """
+        if not results:
+            return None
+        any_wire = any(
+            isinstance(r.parameters, (Parameters, CompressedParameters))
+            for _, r in results
+        )
+        if not any_wire and self.codec is None:
+            return None
+        n = tree_size(global_params)
+        out = []
+        for _, res in results:
+            p = res.parameters
+            if isinstance(p, (Parameters, CompressedParameters)):
+                out.append(p.num_bytes)
+            elif self.codec is not None:
+                out.append(self.codec.wire_bytes(n))
+            else:
+                out.append(tree_bytes(global_params))
+        return out
 
     def _evaluate(self, global_params) -> tuple[float | None, float | None]:
         if self.eval_fn is not None:

@@ -7,9 +7,15 @@ into the global model.
 
 Two integration surfaces:
 - python-side hooks (configure_fit / aggregate_fit) used by the Server with
-  Client objects (the paper-scale path);
-- a jit-able ``aggregate`` + ``server_update`` pair used inside the pjit
-  round step (the pod-scale path, core/rounds.py).
+  Client objects (the paper-scale path).  ``configure_fit`` also performs
+  per-device codec selection when a ``codec_policy`` is set: slow-uplink
+  clients get aggressive compression, backbone clients the full wire; the
+  chosen codec ships in FitIns config and the client answers with a
+  ``CompressedParameters`` payload that ``aggregate_fit`` decodes.
+- a jit-able ``server_update`` (plus the python-path ``aggregate``) used by
+  the unified round step (the pod-scale path, core/rounds.py): the engine
+  reduces codec-decoded deltas itself and hands the average to
+  ``server_update``.
 """
 from __future__ import annotations
 
@@ -21,7 +27,10 @@ import jax.numpy as jnp
 
 from repro.utils.pytree import tree_scale, tree_sub
 
-from ..protocol import FitIns, FitRes
+from ..protocol import (
+    ClientProperties, CompressedParameters, FitIns, FitRes, Parameters,
+    parameters_to_pytree, wire_to_pytree,
+)
 
 PyTree = Any
 
@@ -31,6 +40,7 @@ class Strategy:
     name: str = "base"
     fraction_fit: float = 1.0
     min_fit_clients: int = 1
+    codec_policy: Any = None    # BandwidthCodecPolicy | None: per-device codecs
 
     # ---------------- python-side orchestration ----------------
     def num_fit_clients(self, available: int) -> int:
@@ -47,14 +57,43 @@ class Strategy:
         """Per-round, per-client config shipped in FitIns (epochs, tau, lr...)."""
         return {}
 
+    def codec_for_client(self, client_id: int, properties=None):
+        """Per-device codec selection (None = raw pytree transport)."""
+        if self.codec_policy is None:
+            return None
+        props = properties or ClientProperties(client_id=client_id)
+        return self.codec_policy.codec_for(props)
+
     def configure_fit(
-        self, rnd: int, global_params: PyTree, client_ids: Sequence[int]
+        self,
+        rnd: int,
+        global_params: PyTree,
+        client_ids: Sequence[int],
+        client_properties: dict[int, ClientProperties] | None = None,
     ) -> list[tuple[int, FitIns]]:
         chosen = self.sample_clients(rnd, client_ids)
-        return [
-            (cid, FitIns(parameters=global_params, config=self.fit_config(rnd, cid)))
-            for cid in chosen
-        ]
+        out = []
+        for cid in chosen:
+            cfg = self.fit_config(rnd, cid)
+            codec = self.codec_for_client(
+                cid, (client_properties or {}).get(cid)
+            )
+            if codec is not None:
+                cfg = {**cfg, "codec": codec}
+            out.append((cid, FitIns(parameters=global_params, config=cfg)))
+        return out
+
+    @staticmethod
+    def fitres_parameters(res: FitRes, global_params: PyTree) -> PyTree:
+        """Materialize a FitRes payload as a params pytree: decodes the
+        ``CompressedParameters`` delta wire (against the global the client
+        trained from) and the serialized ``Parameters`` wire alike."""
+        p = res.parameters
+        if isinstance(p, CompressedParameters):
+            return wire_to_pytree(p, global_params)
+        if isinstance(p, Parameters):
+            return parameters_to_pytree(p, global_params)
+        return p
 
     def aggregate_fit(
         self, rnd: int, results: list[tuple[int, FitRes]], global_params: PyTree
@@ -63,9 +102,13 @@ class Strategy:
         weights = jnp.asarray(
             [float(r.num_examples) for _, r in results], jnp.float32
         )
+        if float(jnp.sum(weights)) == 0.0:
+            # every sampled client reported zero examples: fall back to an
+            # unweighted mean instead of poisoning the global with NaNs
+            weights = jnp.ones_like(weights)
+        trees = [self.fitres_parameters(r, global_params) for _, r in results]
         stacked = jax.tree.map(
-            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
-            *[r.parameters for _, r in results],
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees
         )
         new_global, _ = self.aggregate(
             stacked, weights, global_params, self.init_state(global_params), rnd

@@ -1,4 +1,10 @@
-"""FedAvg (McMahan et al., 2017) — the paper's default Strategy."""
+"""FedAvg (McMahan et al., 2017) — the paper's default Strategy.
+
+With the unified round engine, the jitted paths reduce codec-decoded deltas
+themselves and call ``server_update`` (identity here: the weighted average
+IS the new global); ``aggregate`` remains the python-side hook used by
+``aggregate_fit`` after the wire payloads are decoded.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass

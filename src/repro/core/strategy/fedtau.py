@@ -9,6 +9,11 @@ GPU fleet, equalizing round walls at a small accuracy cost.
 In simulation the cutoff maps to a per-client step budget via the cost model
 (steps_i = floor(tau / step_time_i)); the jitted round step realizes partial
 work with a per-client step mask (core/rounds.py).
+
+FedTau composes with per-device codec selection (``Strategy.codec_policy``):
+the same hardware facts that set a client's tau also pick its wire codec, so
+slow-uplink stragglers are helped on both the compute AND the communication
+leg of the round.
 """
 from __future__ import annotations
 

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.utils.pytree import safe_weight_sum
+
 BLOCK = 256
 
 
@@ -55,8 +57,8 @@ def dequant_reduce(
         q = jnp.pad(q, ((0, 0), (0, pad)))
         scales = jnp.pad(scales, ((0, 0), (0, pad // block)))
     np_ = n + pad
-    wn = weights.astype(jnp.float32) / jnp.sum(weights.astype(jnp.float32))
-    wn = wn.reshape(1, c)
+    wf = weights.astype(jnp.float32)
+    wn = (wf / safe_weight_sum(wf)).reshape(1, c)
 
     out = pl.pallas_call(
         functools.partial(_dequant_reduce_kernel, block=block),

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.utils.pytree import safe_weight_sum
+
 
 def _reduce_kernel(u_ref, w_ref, o_ref):
     u = u_ref[...].astype(jnp.float32)          # (C, bn)
@@ -36,8 +38,8 @@ def fedavg_reduce(updates, weights, *, bn: int = 8192, interpret: bool = False):
     if pad:
         updates = jnp.pad(updates, ((0, 0), (0, pad)))
     np_ = n + pad
-    wn = (weights.astype(jnp.float32) / jnp.sum(weights.astype(jnp.float32)))
-    wn = wn.reshape(1, c)
+    wf = weights.astype(jnp.float32)
+    wn = (wf / safe_weight_sum(wf)).reshape(1, c)
 
     out = pl.pallas_call(
         _reduce_kernel,

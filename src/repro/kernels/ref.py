@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.utils.pytree import safe_weight_sum
+
 NEG_INF = -1e30
 
 
@@ -252,7 +254,7 @@ def fedavg_reduce(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     """(C, N) x (C,) -> (N,): sum_c w_c * u_c / sum_c w_c, fp32 accumulate."""
     wf = weights.astype(jnp.float32)
     acc = jnp.einsum("c,cn->n", wf, updates.astype(jnp.float32))
-    return (acc / jnp.sum(wf)).astype(updates.dtype)
+    return (acc / safe_weight_sum(wf)).astype(updates.dtype)
 
 
 # --------------------------------------------------------------------------
@@ -285,4 +287,4 @@ def dequant_reduce(
     )
     wf = weights.astype(jnp.float32)
     acc = jnp.einsum("c,cn->n", wf, x.reshape(c, n))
-    return acc / jnp.sum(wf)
+    return acc / safe_weight_sum(wf)

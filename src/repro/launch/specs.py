@@ -21,6 +21,7 @@ from repro.core import FedAvg, RoundSpec, make_round_step
 from repro.models import build_model
 from repro.models.sharding import ShardRules, serve_rules, train_rules
 from repro.optim import sgd
+from repro.utils.pytree import tree_size
 
 PyTree = Any
 
@@ -141,10 +142,10 @@ def build_train_case(arch_name: str, shape: InputShape, mesh, *, multi_pod: bool
         batch_spec = jax.tree.map(lambda x: P(None, None, batch_axes), batch)
 
     strategy = FedAvg()
+    spec = RoundSpec(max_steps=steps, execution_mode=cfg.execution_mode,
+                     microbatches=cfg.microbatches)
     round_step = make_round_step(
-        model.loss_fn, sgd(0.05), strategy,
-        RoundSpec(max_steps=steps, execution_mode=cfg.execution_mode,
-                  microbatches=cfg.microbatches),
+        model.loss_fn, sgd(0.05), strategy, spec,
         mesh=mesh if cfg.execution_mode == "parallel" else None,
         client_axes=rules.client_axes,
         param_shardings=(
@@ -152,17 +153,28 @@ def build_train_case(arch_name: str, shape: InputShape, mesh, *, multi_pod: bool
         ),
     )
 
+    # codec-owned client state (empty for the default NullCodec): abstract,
+    # threaded through the uniform round_step signature
+    client_state = jax.eval_shape(
+        lambda: spec.codec.init_client_state(clients, tree_size(params_abs))
+    )
+
     args = (
         params_abs,
         (),  # FedAvg server state
+        client_state,
         batch,
         jax.ShapeDtypeStruct((clients,), jnp.float32),
         jax.ShapeDtypeStruct((clients,), jnp.int32),
         jax.ShapeDtypeStruct((), jnp.int32),
     )
+    state_sharding = jax.tree.map(
+        lambda x: NamedSharding(mesh, P()), client_state
+    ) if jax.tree.leaves(client_state) else None
     in_shardings = (
         _named(mesh, param_spec),
         None,
+        state_sharding,
         _named(mesh, batch_spec),
         NamedSharding(mesh, P()),
         NamedSharding(mesh, P()),
@@ -171,6 +183,7 @@ def build_train_case(arch_name: str, shape: InputShape, mesh, *, multi_pod: bool
     out_shardings = (
         _named(mesh, param_spec),
         None,
+        state_sharding,
         None,
     )
 

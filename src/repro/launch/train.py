@@ -18,7 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import RoundSpec, STRATEGIES, make_round_step
+from repro.core import (
+    Int8Codec, NullCodec, RoundSpec, STRATEGIES, TopKCodec, make_round_step,
+)
 from repro.core.cost_model import AWS_DEVICE_FARM, PROFILES, CostModel
 from repro.data.loader import lm_round_batch
 from repro.models import build_model
@@ -42,6 +44,8 @@ def main() -> None:
     ap.add_argument("--strategy", default="fedavg", choices=sorted(STRATEGIES))
     ap.add_argument("--tau-steps", type=int, default=0,
                     help="cutoff step budget per round (0 = no cutoff)")
+    ap.add_argument("--codec", default="fp32", choices=("fp32", "int8", "topk"),
+                    help="uplink wire codec for the compressed round path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -58,9 +62,11 @@ def main() -> None:
 
     strategy = STRATEGIES[args.strategy]()
     steps = args.epochs * args.steps_per_epoch
+    codec = {"fp32": NullCodec(), "int8": Int8Codec(),
+             "topk": TopKCodec(frac=0.01)}[args.codec]
     round_step = jax.jit(make_round_step(
         model.loss_fn, sgd(args.lr), strategy,
-        RoundSpec(max_steps=steps, execution_mode="parallel"),
+        RoundSpec(max_steps=steps, execution_mode="parallel", codec=codec),
     ))
 
     cost = CostModel(
@@ -70,9 +76,11 @@ def main() -> None:
     )
 
     server_state = strategy.init_state(params)
+    client_state = codec.init_client_state(args.clients, tree_size(params))
     weights = jnp.ones((args.clients,), jnp.float32)
     budget = args.tau_steps if args.tau_steps > 0 else steps
     budgets = jnp.full((args.clients,), budget, jnp.int32)
+    uplink = codec.wire_bytes([tree_size(params)] * args.clients)
 
     for rnd in range(1, args.rounds + 1):
         batch = lm_round_batch(
@@ -86,10 +94,12 @@ def main() -> None:
             batch["frontend"] = rng.normal(
                 size=(args.clients, steps, args.batch, cfg.frontend_tokens, fd)
             ).astype(np.float32)
-        params, server_state, metrics = round_step(
-            params, server_state, batch, weights, budgets, rnd
+        params, server_state, client_state, metrics = round_step(
+            params, server_state, client_state, batch, weights, budgets, rnd
         )
-        costs = cost.round_costs([int(budgets[i]) for i in range(args.clients)])
+        costs = cost.round_costs(
+            [int(budgets[i]) for i in range(args.clients)], uplink_bytes=uplink
+        )
         logger.log(
             "round", rnd=rnd,
             loss=float(metrics["client_loss_mean"]),

@@ -14,6 +14,15 @@ import numpy as np
 PyTree = Any
 
 
+def safe_weight_sum(wf):
+    """Denominator for weighted means: an all-zero weight vector (every
+    sampled client reported zero examples) must yield a zero average, not
+    NaNs that poison the global params.  Shared by every reduce path —
+    kernels, reference oracles, codecs, and the round engine."""
+    wsum = jnp.sum(wf)
+    return jnp.where(wsum == 0.0, 1.0, wsum)
+
+
 def tree_zeros_like(tree: PyTree) -> PyTree:
     return jax.tree.map(jnp.zeros_like, tree)
 

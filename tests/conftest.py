@@ -1,0 +1,14 @@
+"""Shared test bootstrap.
+
+Force multiple host-platform devices BEFORE jax initializes so the mesh
+shard_map round-engine tests can build a real multi-device (even multi-"pod")
+CPU mesh in-process.  Single-device tests are unaffected: unsharded
+computations stay on device 0.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8"
+    ).strip()

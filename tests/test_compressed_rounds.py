@@ -1,12 +1,16 @@
-"""Compressed-wire round engine, end-to-end (core/rounds.py + compression).
+"""Unified codec-carrying round engine, end-to-end (core/rounds.py).
 
-Asserts the ISSUE-1 acceptance criteria on the synthetic head-model task:
-- the Int8 compressed parallel round path converges to within rtol=5e-2 of
-  the uncompressed path on final eval loss over 20 rounds;
-- TopK with error feedback also tracks the uncompressed path (looser tol —
-  it transmits a fraction of the mass per round);
-- accumulated error-feedback residuals stay bounded (no blow-up across
-  rounds);
+Asserts the ISSUE-2 acceptance criteria on the synthetic head-model task:
+- ONE round_step signature across parallel / mesh shard_map / sequential:
+  (global, server_state, client_state, batches, weights, budgets, rnd)
+  -> (global, server_state, client_state, metrics), with the client state
+  owned by the codec (empty for NullCodec);
+- the Int8 compressed path converges to within rtol=5e-2 of the NullCodec
+  baseline on final eval loss over 20 rounds on ALL THREE paths (the mesh
+  path runs on a real multi-device host-platform mesh, see conftest.py);
+- TopK with error feedback also tracks the baseline (looser tol — it
+  transmits a fraction of the mass per round);
+- accumulated error-feedback residuals stay bounded (no blow-up);
 - batch codec roundtrips agree with the 1-D codec surface.
 """
 import jax
@@ -15,8 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    FedAvg, Int8Codec, NullCodec, RoundSpec, TopKCodec,
-    init_residuals, make_round_step,
+    FedAvg, Int8Codec, NullCodec, RoundSpec, TopKCodec, make_round_step,
 )
 from repro.models import build_model
 from repro.optim import sgd
@@ -47,56 +50,76 @@ def _setup(seed=0):
     return m, params, train, eval_batch
 
 
-def _run(m, params, train, eval_batch, codec):
+def _client_mesh():
+    """A 2x2 ("pod", "data") mesh: 4 clients, hierarchical cross-pod psum."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs >=4 host devices (see conftest.py)")
+    return jax.make_mesh((2, 2), ("pod", "data")), ("pod", "data")
+
+
+def _run(m, params, train, eval_batch, codec, mode="parallel", mesh=None,
+         client_axes=("data",), rounds=ROUNDS):
     strat = FedAvg()
-    spec = RoundSpec(max_steps=STEPS, execution_mode="parallel", codec=codec)
-    rs = jax.jit(make_round_step(m.loss_fn, sgd(0.1), strat, spec))
+    spec = RoundSpec(max_steps=STEPS, execution_mode=mode, codec=codec)
+    rs = jax.jit(make_round_step(
+        m.loss_fn, sgd(0.1), strat, spec, mesh=mesh, client_axes=client_axes,
+    ))
     w = jnp.ones(C)
     bud = jnp.full((C,), STEPS, jnp.int32)
     state = strat.init_state(params)
+    cstate = codec.init_client_state(C, tree_size(params))
+    p = params
     res_norms = []
-    if codec is None:
-        rs_plain = rs
-        p = params
-        for rnd in range(ROUNDS):
-            p, state, _ = rs_plain(p, state, train, w, bud, rnd)
-    else:
-        p = params
-        res = init_residuals(params, C)
-        for rnd in range(ROUNDS):
-            p, state, res, met = rs(p, state, res, train, w, bud, rnd)
+    for rnd in range(rounds):
+        p, state, cstate, met = rs(p, state, cstate, train, w, bud, rnd)
+        if "residual_norm_mean" in met:
             res_norms.append(float(met["residual_norm_mean"]))
     loss, _ = m.loss_fn(p, eval_batch)
     return float(loss), res_norms
 
 
-def test_compressed_round_state_shapes():
+# ---------------- the uniform contract ----------------
+def test_client_state_is_codec_owned():
+    m, params, _, _ = _setup()
+    n = tree_size(params)
+    assert NullCodec().init_client_state(C, n) == ()
+    res = Int8Codec().init_client_state(C, n)
+    assert res.shape == (C, n) and res.dtype == jnp.float32
+    assert not np.asarray(res).any()
+
+
+@pytest.mark.parametrize("mode", ["parallel", "sequential"])
+def test_round_step_uniform_signature(mode):
+    """Same 7-arg/4-tuple contract whether or not anything is compressed."""
     m, params, train, _ = _setup()
-    res = init_residuals(params, C)
-    assert res.shape == (C, tree_size(params))
-    spec = RoundSpec(max_steps=STEPS, execution_mode="parallel", codec=Int8Codec())
-    rs = jax.jit(make_round_step(m.loss_fn, sgd(0.1), FedAvg(), spec))
-    p, _, new_res, met = rs(
-        params, (), res, train, jnp.ones(C), jnp.full((C,), STEPS, jnp.int32), 0
-    )
-    assert new_res.shape == res.shape
-    assert jax.tree.structure(p) == jax.tree.structure(params)
-    assert float(met["residual_norm_mean"]) >= 0.0
+    n = tree_size(params)
+    for codec in (NullCodec(), Int8Codec()):
+        spec = RoundSpec(max_steps=STEPS, execution_mode=mode, codec=codec)
+        rs = jax.jit(make_round_step(m.loss_fn, sgd(0.1), FedAvg(), spec))
+        cstate = codec.init_client_state(C, n)
+        p, sstate, new_cstate, met = rs(
+            params, (), cstate, train, jnp.ones(C),
+            jnp.full((C,), STEPS, jnp.int32), 0,
+        )
+        assert jax.tree.structure(p) == jax.tree.structure(params)
+        assert jax.tree.structure(new_cstate) == jax.tree.structure(cstate)
+        if jax.tree.leaves(cstate):
+            assert new_cstate.shape == (C, n)
+            assert float(met["residual_norm_mean"]) >= 0.0
+        assert {"client_loss_mean", "client_loss_max", "steps_total"} <= set(met)
 
 
-def test_null_codec_matches_uncompressed_path():
-    """The identity codec is exactly the uncompressed engine (same reduce)."""
-    m, params, train, eval_batch = _setup()
-    base, _ = _run(m, params, train, eval_batch, None)
-    null, res_norms = _run(m, params, train, eval_batch, NullCodec())
-    assert null == pytest.approx(base, rel=1e-3)
-    assert max(res_norms) < 1e-4  # nothing is ever left untransmitted
+def test_default_codec_is_null():
+    assert isinstance(RoundSpec(max_steps=1, execution_mode="parallel").codec,
+                      NullCodec)
 
 
+# ---------------- parallel (vmap) path ----------------
 def test_int8_round_path_converges_like_uncompressed():
-    """ISSUE-1 acceptance: Int8 final eval loss within rtol=5e-2 over 20 rounds."""
+    """ISSUE acceptance: Int8 final eval loss within rtol=5e-2 over 20 rounds."""
     m, params, train, eval_batch = _setup()
-    base, _ = _run(m, params, train, eval_batch, None)
+    base, base_norms = _run(m, params, train, eval_batch, NullCodec())
+    assert base_norms == []  # NullCodec carries no residual state at all
     int8, res_norms = _run(m, params, train, eval_batch, Int8Codec())
     assert int8 == pytest.approx(base, rel=5e-2)
     # error feedback keeps the residual bounded (quantization error scale)
@@ -106,7 +129,7 @@ def test_int8_round_path_converges_like_uncompressed():
 
 def test_topk_error_feedback_converges_and_residual_bounded():
     m, params, train, eval_batch = _setup()
-    base, _ = _run(m, params, train, eval_batch, None)
+    base, _ = _run(m, params, train, eval_batch, NullCodec())
     topk, res_norms = _run(m, params, train, eval_batch, TopKCodec(frac=0.25))
     # sparsified wire still reaches the neighborhood of the dense optimum
     assert topk == pytest.approx(base, rel=0.25)
@@ -115,6 +138,53 @@ def test_topk_error_feedback_converges_and_residual_bounded():
     assert res_norms[-1] < 5 * max(res_norms[:5])
 
 
+# ---------------- mesh shard_map path ----------------
+def test_mesh_path_null_codec_matches_vmap_path():
+    m, params, train, eval_batch = _setup()
+    mesh, axes = _client_mesh()
+    base, _ = _run(m, params, train, eval_batch, NullCodec(), rounds=3)
+    meshed, _ = _run(m, params, train, eval_batch, NullCodec(),
+                     mesh=mesh, client_axes=axes, rounds=3)
+    assert meshed == pytest.approx(base, rel=1e-3)
+
+
+def test_int8_mesh_path_converges_like_uncompressed():
+    """ISSUE acceptance: codec on the shard_map path (encode before the
+    hierarchical cross-pod psum), within 5% of NullCodec over 20 rounds."""
+    m, params, train, eval_batch = _setup()
+    mesh, axes = _client_mesh()
+    base, _ = _run(m, params, train, eval_batch, NullCodec(),
+                   mesh=mesh, client_axes=axes)
+    int8, res_norms = _run(m, params, train, eval_batch, Int8Codec(),
+                           mesh=mesh, client_axes=axes)
+    assert int8 == pytest.approx(base, rel=5e-2)
+    assert res_norms and max(res_norms) < 1.0
+
+
+# ---------------- sequential scan path ----------------
+def test_int8_sequential_path_converges_like_uncompressed():
+    """ISSUE acceptance: codec through the sequential scan (per-client state
+    rows scanned alongside), within 5% of NullCodec over 20 rounds."""
+    m, params, train, eval_batch = _setup()
+    base, _ = _run(m, params, train, eval_batch, NullCodec(), mode="sequential")
+    int8, res_norms = _run(m, params, train, eval_batch, Int8Codec(),
+                           mode="sequential")
+    assert int8 == pytest.approx(base, rel=5e-2)
+    assert res_norms and max(res_norms) < 1.0
+
+
+def test_sequential_residual_rows_track_clients():
+    """The scanned state rows land back in per-client order: round 2 of a
+    sequential run equals round 2 of a parallel run (same codec state)."""
+    m, params, train, eval_batch = _setup()
+    outs = {}
+    for mode in ("parallel", "sequential"):
+        outs[mode], _ = _run(m, params, train, eval_batch, Int8Codec(),
+                             mode=mode, rounds=2)
+    assert outs["sequential"] == pytest.approx(outs["parallel"], rel=1e-2)
+
+
+# ---------------- codec surfaces ----------------
 @pytest.mark.parametrize("codec", [Int8Codec(), TopKCodec(frac=0.1), NullCodec()])
 def test_batch_codec_agrees_with_vector_codec(codec):
     rng = np.random.default_rng(3)
@@ -134,10 +204,27 @@ def test_batch_codec_agrees_with_vector_codec(codec):
     np.testing.assert_allclose(np.asarray(red), np.asarray(exp), atol=1e-5, rtol=1e-5)
 
 
-def test_codec_rejects_unsupported_modes():
-    m, params, _, _ = _setup()
-    with pytest.raises(NotImplementedError):
-        make_round_step(
-            m.loss_fn, sgd(0.1), FedAvg(),
-            RoundSpec(max_steps=1, execution_mode="sequential", codec=Int8Codec()),
-        )
+@pytest.mark.parametrize("codec", [Int8Codec(), TopKCodec(frac=0.1)])
+def test_transmit_tree_matches_encode_decode(codec):
+    rng = np.random.default_rng(7)
+    delta = {"a": jnp.asarray(rng.normal(size=(40, 8)) * 0.01, jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(13,)) * 0.01, jnp.float32)}
+    n = 40 * 8 + 13
+    state = jnp.zeros((n,), jnp.float32)
+    dec_tree, new_state = codec.transmit_tree(delta, state)
+    from repro.utils.pytree import tree_flatten_to_vector
+    vec = tree_flatten_to_vector(delta)
+    dec_vec = codec.decode(codec.encode(vec))
+    np.testing.assert_allclose(
+        np.asarray(tree_flatten_to_vector(dec_tree)), np.asarray(dec_vec),
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(new_state), np.asarray(vec - dec_vec), atol=1e-6
+    )
+
+
+def test_null_transmit_tree_is_identity():
+    delta = {"a": jnp.ones((4, 4), jnp.bfloat16)}
+    out, state = NullCodec().transmit_tree(delta, ())
+    assert out is delta and state == ()

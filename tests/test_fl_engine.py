@@ -8,8 +8,9 @@ from hypothesis_compat import given, settings, st
 
 from repro.checkpoint.io import load_pytree, save_pytree
 from repro.core import (
-    FedAdam, FedAvg, FedProx, FedTau, RoundSpec, make_round_step,
-    parameters_to_pytree, pytree_to_parameters,
+    CompressedParameters, FedAdam, FedAvg, FedProx, FedTau, RoundSpec,
+    compress_to_wire, make_round_step, parameters_to_pytree,
+    pytree_to_parameters, wire_to_pytree,
 )
 from repro.core.compression import (
     Int8Codec, NullCodec, TopKCodec, compress_update, decompress_update,
@@ -85,7 +86,7 @@ def test_round_step_parallel_reduces_loss_over_rounds():
     losses = []
     state = strat.init_state(params)
     for rnd in range(4):
-        params, state, metrics = rs(params, state, batch, w, budgets, rnd)
+        params, state, _, metrics = rs(params, state, (), batch, w, budgets, rnd)
         losses.append(float(metrics["client_loss_mean"]))
     assert losses[-1] < losses[0]
 
@@ -97,16 +98,25 @@ def test_round_step_sequential_matches_parallel_fedavg():
     batch = _round_inputs(cfg)
     w = jnp.asarray([1.0, 2.0, 0.5])
     budgets = jnp.full((3,), 2, jnp.int32)
-    outs = {}
+    outs, metrics = {}, {}
     for mode in ("parallel", "sequential"):
         strat = FedAvg()
         rs = jax.jit(make_round_step(
             m.loss_fn, sgd(0.1), strat, RoundSpec(max_steps=2, execution_mode=mode)
         ))
-        new, _, _ = rs(params, strat.init_state(params), batch, w, budgets, 0)
+        new, _, _, met = rs(params, strat.init_state(params), (), batch, w, budgets, 0)
         outs[mode] = new
+        metrics[mode] = met
     for a, b in zip(jax.tree.leaves(outs["parallel"]), jax.tree.leaves(outs["sequential"])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3)
+    # the sequential path tracks the true running max (not loss_mean)
+    assert float(metrics["sequential"]["client_loss_max"]) == pytest.approx(
+        float(metrics["parallel"]["client_loss_max"]), rel=1e-3
+    )
+    assert (
+        float(metrics["sequential"]["client_loss_max"])
+        >= float(metrics["sequential"]["client_loss_mean"]) - 1e-6
+    )
 
 
 def test_round_step_tau_budget_masks_steps():
@@ -120,9 +130,26 @@ def test_round_step_tau_budget_masks_steps():
     batch = _round_inputs(cfg, C=2)
     w = jnp.ones(2)
     # both frozen -> global unchanged
-    new, _, met = rs(params, (), batch, w, jnp.zeros(2, jnp.int32), 0)
+    new, _, _, met = rs(params, (), (), batch, w, jnp.zeros(2, jnp.int32), 0)
     assert int(met["steps_total"]) == 0
     for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["parallel", "sequential"])
+def test_round_step_all_zero_weights_is_noop(mode):
+    """Zero aggregation weight for every client (all reported 0 examples)
+    must leave the global finite on every engine path, not NaN-poison it."""
+    m, cfg = _tiny_model()
+    params = m.init(jax.random.key(0))
+    rs = jax.jit(make_round_step(
+        m.loss_fn, sgd(0.1), FedAvg(), RoundSpec(max_steps=2, execution_mode=mode)
+    ))
+    batch = _round_inputs(cfg, C=2)
+    new, _, _, _ = rs(params, (), (), batch, jnp.zeros(2),
+                      jnp.full((2,), 2, jnp.int32), 0)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(params)):
+        assert np.isfinite(np.asarray(a)).all()
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
@@ -138,7 +165,7 @@ def test_round_step_microbatching_equivalent():
             m.loss_fn, sgd(0.1), strat,
             RoundSpec(max_steps=1, execution_mode="parallel", microbatches=mb),
         ))
-        new, _, _ = rs(params, (), batch, jnp.ones(2), jnp.ones(2, jnp.int32), 0)
+        new, _, _, _ = rs(params, (), (), batch, jnp.ones(2), jnp.ones(2, jnp.int32), 0)
         outs[mb] = new
     for a, b in zip(jax.tree.leaves(outs[1]), jax.tree.leaves(outs[4])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-2, rtol=5e-2)
@@ -156,6 +183,60 @@ def test_parameters_wire_roundtrip():
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
         assert a.dtype == b.dtype
         np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_parameters_wire_roundtrip_bfloat16_bit_exact():
+    """The uint16-view path must preserve bf16 payloads bit for bit."""
+    rng = np.random.default_rng(5)
+    vals = jnp.asarray(rng.normal(size=(37,)), jnp.float32).astype(jnp.bfloat16)
+    tree = {"w": vals}
+    back = parameters_to_pytree(pytree_to_parameters(tree), tree)
+    assert back["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(vals.view(jnp.uint16)), np.asarray(back["w"].view(jnp.uint16))
+    )
+
+
+def test_parameters_wire_roundtrip_empty_leaves():
+    """Zero-element leaves survive the wire (empty buffers, exact shapes)."""
+    tree = {
+        "empty": jnp.zeros((0,), jnp.float32),
+        "empty2d": jnp.zeros((3, 0), jnp.bfloat16),
+        "full": jnp.ones((2,), jnp.float32),
+    }
+    wire = pytree_to_parameters(tree)
+    back = parameters_to_pytree(wire, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+def test_parameters_wire_structure_mismatch_asserts():
+    tree = {"a": jnp.ones((2,)), "b": jnp.ones((3,))}
+    wire = pytree_to_parameters(tree)
+    with pytest.raises(AssertionError, match="structure mismatch"):
+        parameters_to_pytree(wire, {"a": jnp.ones((2,))})
+
+
+@pytest.mark.parametrize("codec,n", [
+    (NullCodec(), 300), (Int8Codec(), 300), (Int8Codec(), 512),
+    (TopKCodec(frac=0.1), 300),
+])
+def test_compressed_parameters_wire_roundtrip(codec, n):
+    """CompressedParameters serialization: payload bytes == codec.wire_bytes
+    (Int8 encoder padding must NOT cross the wire) and the decode against
+    the global params reproduces encode->decode exactly."""
+    rng = np.random.default_rng(n)
+    old = {"w": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+    new = {"w": old["w"] + 0.01 * jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+    enc, _ = compress_update(codec, new, old)
+    cp = compress_to_wire(codec, enc, n)
+    assert isinstance(cp, CompressedParameters)
+    assert cp.num_bytes == codec.wire_bytes(n)
+    rebuilt = wire_to_pytree(cp, old)
+    expected = decompress_update(codec, enc, old)
+    np.testing.assert_allclose(
+        np.asarray(rebuilt["w"]), np.asarray(expected["w"]), atol=1e-6
+    )
 
 
 # ---------------- cost model ----------------
@@ -209,6 +290,32 @@ def test_codec_wire_bytes_ordering():
     assert Int8Codec().wire_bytes(n) * 3.5 < NullCodec().wire_bytes(n)
 
 
+@pytest.mark.parametrize("codec", [NullCodec(), Int8Codec(), TopKCodec(frac=0.01)])
+def test_codec_wire_bytes_accepts_per_client_vector(codec):
+    """Heterogeneous-fleet accounting: a vector of sizes in, a list out,
+    elementwise equal to the scalar call."""
+    sizes = [300, 511, 4096]
+    out = codec.wire_bytes(sizes)
+    assert isinstance(out, list) and len(out) == 3
+    assert out == [codec.wire_bytes(n) for n in sizes]
+    assert codec.wire_bytes(np.asarray(sizes)) == out
+    assert isinstance(codec.wire_bytes(300), int)
+
+
+def test_cost_model_per_client_uplink_vector():
+    """round_costs/round_comm_bytes take one wire size per client."""
+    cm = CostModel(profiles=[PROFILES["pixel-4"], PROFILES["jetson-tx2-gpu"]],
+                   update_bytes=4_000_000)
+    ups = [100_000, 2_000_000]
+    costs = cm.round_costs([10, 10], uplink_bytes=ups)
+    for c, up, p in zip(costs, ups, [PROFILES["pixel-4"], PROFILES["jetson-tx2-gpu"]]):
+        expected = up * 8 / (p.uplink_mbps * 1e6) + 4_000_000 * 8 / (p.downlink_mbps * 1e6)
+        assert c.t_comm_s == pytest.approx(expected)
+    assert cm.round_comm_bytes(2, uplink_bytes=ups) == sum(ups) + 2 * 4_000_000
+    with pytest.raises(AssertionError):
+        cm.round_costs([10, 10], uplink_bytes=[1])
+
+
 def test_cost_model_charges_compressed_uplink():
     """uplink_bytes shrinks t_comm/energy; downlink unchanged."""
     cm = CostModel(profiles=[PROFILES["pixel-4"]], update_bytes=4_000_000)
@@ -234,6 +341,17 @@ def test_int8_codec_roundtrip_and_wire_size():
         np.asarray(rebuilt["w"]), np.asarray(new["w"]), atol=1e-3
     )
     assert codec.wire_bytes(300) < 300 * 4  # smaller than fp32 wire
+
+
+@pytest.mark.parametrize("codec", [NullCodec(), Int8Codec(), TopKCodec(frac=0.1)])
+def test_codec_reduce_zero_weights_yields_zeros(codec):
+    """All-zero aggregation weights must produce a zero average on every
+    reduce path (kernel and reference oracle alike), never NaNs."""
+    deltas = jnp.ones((3, 512), jnp.float32) * 0.01
+    avg, _ = codec.aggregate_batch(
+        deltas, jnp.zeros(3), codec.init_client_state(3, 512)
+    )
+    np.testing.assert_array_equal(np.asarray(avg), 0.0)
 
 
 def test_topk_codec_keeps_largest():

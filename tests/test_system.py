@@ -11,12 +11,14 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    FedAvg, FedTau, JaxClient, Server, PROFILES,
+    BandwidthCodecPolicy, Client, CompressedParameters, FedAvg, FedTau,
+    FitRes, Int8Codec, JaxClient, NullCodec, Server, TopKCodec, PROFILES,
 )
 from repro.core.server import make_cost_model_for
 from repro.data.federated import dirichlet_partition
 from repro.data.synthetic import make_features
 from repro.models import build_model
+from repro.utils.pytree import tree_bytes, tree_size
 
 
 def _make_setup(n_clients=4, seed=0):
@@ -91,3 +93,78 @@ def test_tau_cutoff_limits_steps():
     _, hist = server.run(params, num_rounds=2)
     assert hist.rounds[-1].steps < 4 * full
     assert hist.final_accuracy() > 0.1   # still learns
+
+
+def test_heterogeneous_fleet_per_device_codecs():
+    """ISSUE acceptance: Pixel-class (slow uplink) ships TopK, Jetson-class
+    Int8, TPU-class the full fp32 wire; FitRes payload bytes equal the
+    codec's wire size (not fp32 tree bytes) and History.comm_bytes reflects
+    the per-client wire sizes."""
+    m, params, clients = _make_setup(n_clients=3)
+    profile_names = ["pixel-4", "jetson-tx2-gpu", "tpu-v5e-chip"]
+    for c, name in zip(clients, profile_names):
+        c.device_profile = name
+    cm = make_cost_model_for(params, [PROFILES[p] for p in profile_names])
+    strat = FedAvg(local_epochs=1, local_lr=0.1, codec_policy=BandwidthCodecPolicy())
+    n = tree_size(params)
+
+    # per-device selection + actual wire payloads
+    props = {c.client_id: c.properties() for c in clients}
+    fit_ins = strat.configure_fit(1, params, [0, 1, 2], client_properties=props)
+    expected_codecs = {0: TopKCodec, 1: Int8Codec, 2: NullCodec}
+    wire_sizes = {}
+    for cid, ins in fit_ins:
+        codec = ins.config["codec"]
+        assert type(codec) is expected_codecs[cid]
+        res = clients[cid].fit(ins)
+        assert isinstance(res.parameters, CompressedParameters)
+        assert res.parameters.num_bytes == codec.wire_bytes(n)
+        assert res.parameters.num_bytes != tree_bytes(params) or isinstance(
+            codec, NullCodec
+        )
+        wire_sizes[cid] = res.parameters.num_bytes
+    assert wire_sizes[0] < wire_sizes[1] < wire_sizes[2]
+
+    # end-to-end: the server charges each client its own wire size
+    server = Server(strategy=strat, clients=clients, cost_model=cm)
+    server.logger.quiet = True
+    _, hist = server.run(params, num_rounds=2)
+    expected_comm = sum(wire_sizes.values()) + 3 * cm.update_bytes
+    assert hist.rounds[0].comm_bytes == expected_comm
+    accs = [a for _, a in hist.accuracy_series()]
+    assert accs[-1] > accs[0]  # compressed fleet still learns
+
+    # run() resets error-feedback state so experiments don't leak into
+    # each other when the same client objects are reused
+    assert clients[0]._residual is not None  # set during the run above
+    server.run(params, num_rounds=0)
+    assert clients[0]._residual is None
+
+
+class _ZeroExampleClient(Client):
+    """A degenerate client: trains nothing, reports zero examples."""
+
+    def __init__(self, params):
+        self._params = params
+
+    def fit(self, ins):
+        return FitRes(parameters=ins.parameters, num_examples=0,
+                      metrics={"loss": 1.25, "steps_done": 1})
+
+    def evaluate(self, ins):
+        from repro.core import EvaluateRes
+
+        return EvaluateRes(loss=1.25, num_examples=1, metrics={"acc": 0.0})
+
+
+def test_server_survives_all_zero_example_clients():
+    """Regression: all sampled clients reporting num_examples == 0 used to
+    crash np.average with ZeroDivisionError; now an unweighted mean."""
+    m, params, _ = _make_setup(n_clients=2)
+    clients = [_ZeroExampleClient(params), _ZeroExampleClient(params)]
+    server = Server(strategy=FedAvg(local_epochs=1), clients=clients)
+    server.logger.quiet = True
+    final, hist = server.run(params, num_rounds=1)
+    assert hist.rounds[0].train_loss == pytest.approx(1.25)
+    # the unweighted-mean fallback keeps the global finite (no NaN poison)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(final))
