@@ -1,6 +1,6 @@
 """Compression benchmark: accuracy-vs-wire-bytes + fused-kernel bandwidth.
 
-Three sections, CSV rows like benchmarks/run.py:
+Five sections, CSV rows like benchmarks/run.py:
 
 1. ``wire[...]``    — per-client uplink bytes for the FULL resnet18_cifar10
    and qwen3_0_6b configs under every codec (param counts via
@@ -13,6 +13,16 @@ Three sections, CSV rows like benchmarks/run.py:
 3. ``kernel[...]``  — interpret-mode timing of the fused dequant+reduce
    Pallas kernel vs the unfused dequantize-then-fedavg_reduce pair, with
    effective GB/s over the int8 payload.
+4. ``topk[...]``    — the O(C·k) scatter-accumulate TopK reduce vs the
+   densify-then-fedavg_reduce baseline over a (C, N, k-fraction) sweep:
+   per-call time plus peak intermediate bytes (XLA ``memory_analysis``
+   temps when the backend reports them, the analytic payload/dense-matrix
+   sizes otherwise).  ISSUE-3 acceptance: sparse beats dense at
+   k/N <= 0.1 for C >= 8.
+5. ``sparse[...]``  — path-selection guard: asserts ``TopKCodec`` routes
+   ``aggregate_batch``/``reduce`` through the sparse scatter dispatch and
+   NEVER through ``decode_batch`` densification (a regression here fails
+   the benchmark, which CI runs with ``--smoke``).
 
   PYTHONPATH=src python -m benchmarks.compression_bench [--fast|--smoke]
 
@@ -50,6 +60,18 @@ def _timeit(fn, *args, n=3):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def _timeit_median(fn, *args, n=9):
+    """Median of n individually timed calls — robust to the multi-second
+    scheduler stalls of shared CI hosts that a mean-of-batch absorbs."""
+    jax.block_until_ready(fn(*args))  # compile
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6  # us
 
 
 # ---------------------------------------------------------------- section 1
@@ -189,6 +211,108 @@ def bench_kernel(fast: bool) -> list[str]:
     ]
 
 
+# ---------------------------------------------------------------- section 4
+def _temp_bytes(fn, *args):
+    """Peak XLA temp allocation of jit(fn)(*args), or None if unreported."""
+    try:
+        mem = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return int(mem.temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def bench_topk_reduce(fast: bool) -> list[str]:
+    """Sparse scatter-accumulate vs densify baseline over (C, N, k/N)."""
+    from repro.core import TopKCodec
+    from repro.kernels import ops, ref
+
+    sweep = (
+        [(8, 1 << 14), (8, 1 << 16)] if fast
+        else [(8, 1 << 16), (8, 1 << 18), (32, 1 << 16), (32, 1 << 18)]
+    )
+    rows = []
+    rng = np.random.default_rng(0)
+    for c, n in sweep:
+        deltas = jnp.asarray(rng.normal(size=(c, n)) * 0.01, jnp.float32)
+        w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+        for frac in (0.01, 0.1):
+            codec = TopKCodec(frac=frac)
+            k = codec.k_of(n)
+            enc = codec.encode_batch(deltas)
+            idx, val = enc["idx"], enc["val"]
+
+            def sparse_fn(idx, val, w):
+                return ops.topk_scatter_reduce(idx, val, w, n)
+
+            def dense_fn(idx, val, w):
+                dense = (
+                    jnp.zeros((c, n), val.dtype).at[jnp.arange(c)[:, None], idx]
+                    .add(val)
+                )  # the pre-ISSUE-3 densify: (C, N) materialized in HBM
+                return ref.fedavg_reduce(dense, w)
+
+            us_s = _timeit_median(jax.jit(sparse_fn), idx, val, w)
+            us_d = _timeit_median(jax.jit(dense_fn), idx, val, w)
+            # peak intermediates: measured temps when available, else the
+            # analytic sizes (dense: the (C, N) fp32 matrix; sparse: the
+            # payload + the (N,) fp32 accumulator)
+            tb_s = _temp_bytes(sparse_fn, idx, val, w)
+            tb_d = _temp_bytes(dense_fn, idx, val, w)
+            # use measured temps only when BOTH sides report (0 is a valid
+            # measurement); otherwise both analytic, never a mixed ratio
+            if tb_s is not None and tb_d is not None:
+                ib_s, ib_d = tb_s, tb_d
+            else:
+                ib_s, ib_d = c * k * 8 + n * 4, c * n * 4
+            rows.append(
+                f"topk[C{c}_N{n}_k{frac}],{us_s:.0f},"
+                f"dense_us={us_d:.0f};speedup={us_d / us_s:.2f}x;"
+                f"peak_intermediate_bytes={ib_s};dense_intermediate_bytes={ib_d};"
+                f"mem_reduction={ib_d / max(ib_s, 1):.1f}x"
+            )
+    return rows
+
+
+# ---------------------------------------------------------------- section 5
+def check_sparse_path_selected() -> list[str]:
+    """Assert TopK aggregation routes through the sparse scatter dispatch
+    (ops.topk_scatter_reduce) and never densifies via decode_batch."""
+    from repro.core import TopKCodec
+    from repro.kernels import ops, ref
+
+    codec = TopKCodec(frac=0.1)
+    rng = np.random.default_rng(1)
+    c, n = 8, 4096
+    deltas = jnp.asarray(rng.normal(size=(c, n)) * 0.01, jnp.float32)
+    w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+    state = codec.init_client_state(c, n)
+
+    before = ops.topk_sparse_calls()
+    orig = TopKCodec.decode_batch
+
+    def _boom(self, enc):  # any densify on the aggregation path is banned
+        raise AssertionError(
+            "TopKCodec.decode_batch called on the aggregation path — the "
+            "O(C·k) scatter reduce has regressed to densify"
+        )
+
+    TopKCodec.decode_batch = _boom
+    try:
+        avg, new_state = codec.aggregate_batch(deltas, w, state)
+    finally:
+        TopKCodec.decode_batch = orig
+    calls = ops.topk_sparse_calls() - before
+    assert calls >= 1, "sparse scatter dispatch was never reached"
+
+    # and the sparse result still equals the dense reference within 1e-5
+    enc = codec.encode_batch(deltas + state)
+    exp = ref.fedavg_reduce(codec.decode_batch(enc), w)
+    np.testing.assert_allclose(np.asarray(avg), np.asarray(exp),
+                               atol=1e-5, rtol=1e-5)
+    err = float(np.max(np.abs(np.asarray(avg) - np.asarray(exp))))
+    return [f"sparse[topk_path_selected],0,dispatches={calls};max_err_vs_dense={err:.2e}"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -206,6 +330,10 @@ def main() -> None:
     for row in bench_accuracy_vs_bytes(rounds, smoke=args.smoke):
         print(row)
     for row in bench_kernel(args.fast or args.smoke):
+        print(row)
+    for row in bench_topk_reduce(args.fast or args.smoke):
+        print(row)
+    for row in check_sparse_path_selected():
         print(row)
 
 

@@ -7,10 +7,39 @@ shrink the client->server payload that the cost model charges for:
   Pallas quantize kernel; decoded server-side through the fused
   dequantize+weighted-reduce kernel (one HBM pass over the int8 payload).
 - ``TopKCodec``: top-k sparsification with error feedback (classic gradient
-  compression).
+  compression).  Server-side aggregation is O(C·k): the (idx, val) payloads
+  feed the scatter-accumulate kernel directly (see the O(C·k) reduce
+  contract below) — the dense (C, n_params) delta matrix is never built.
 - ``NullCodec``: identity fp32 wire — the uncompressed baseline with the
   same interface, and the *default* codec of ``RoundSpec``, so the round
   engine has exactly one code path.
+
+The O(C·k) TopK reduce contract
+-------------------------------
+
+- **Payload layout**: per client, ``idx`` (k,) int32 positions and ``val``
+  (k,) fp32 values, 8k wire bytes.  The encoder is deterministic (equal
+  magnitudes tie-break toward the lower index via a stable sort) and emits
+  indices in canonical ascending order, so a given delta yields
+  bit-identical wire bytes under jit and eager alike.
+- **Duplicate-index semantics**: our encoder emits distinct indices, but
+  every consumer (``decode``, ``decode_batch``, ``reduce``, the Pallas
+  kernel and its oracle) treats duplicates as scatter-ADD — a foreign
+  payload with repeated indices means the same thing on every path.
+- **Reduce paths**: ``aggregate_batch`` (jit-parallel engine) scatter-
+  reduces the encoded payload and updates the error-feedback state by
+  zeroing the transmitted coordinates — O(C·k), no dense decode;
+  ``transmit_tree`` (mesh shard_map / sequential scan) decodes one
+  client's (n_params,) vector at a time, never a (C, n_params) matrix;
+  ``Strategy.aggregate_fit`` scatter-reduces serialized wire payloads when
+  the whole fleet shipped TopK.
+- **When densify still applies**: ``decode_batch`` exists for callers that
+  explicitly want the dense per-client matrix, and ``aggregate_fit`` falls
+  back to dense decoding for mixed-codec fleets (some clients on Int8/
+  Null) — the homogeneous-TopK reduce itself never densifies.  The fused
+  kernel additionally requires the (n_params,) accumulator to fit VMEM;
+  above ``scatter_reduce.VMEM_ELEMS`` the dispatch falls back to the XLA
+  scatter-add oracle, which is still O(C·k).
 
 Codecs operate on the *delta* (client params - global params), which is
 small-magnitude and quantizes well.  The ``UpdateCodec`` base class defines
@@ -269,7 +298,25 @@ class Int8Codec(UpdateCodec):
 
 @dataclass(frozen=True)
 class TopKCodec(UpdateCodec):
-    """Keep the k largest-|.| entries; the residual feeds back next round."""
+    """Keep the k largest-|.| entries; the residual feeds back next round.
+
+    Wire contract (load-bearing for the O(C·k) reduce):
+
+    - selection is DETERMINISTIC: magnitudes tie-break toward the lower
+      index via a stable sort (raw ``lax.top_k`` tie order is lowering-
+      dependent), so a given delta produces bit-identical payloads under
+      jit and eager alike;
+    - payload indices are canonically sorted ascending — reproducible wire
+      bytes, and the scatter kernel walks VMEM monotonically;
+    - this encoder emits distinct indices, but every consumer treats
+      duplicate indices as ACCUMULATE (scatter-add), so foreign payloads
+      mean the same thing on all paths;
+    - ``reduce`` consumes (idx, val) directly through the scatter-
+      accumulate kernel — O(C·k) time and memory, no dense (C, N) matrix;
+      ``decode_batch`` remains the explicit densify fallback for callers
+      that want the per-client dense matrix (nothing on the reduce or
+      error-feedback path does).
+    """
 
     frac: float = 0.01
 
@@ -279,31 +326,68 @@ class TopKCodec(UpdateCodec):
     def _wire_bytes_scalar(self, n_params: int) -> int:
         return self.k_of(n_params) * 8  # int32 index + fp32 value
 
+    @staticmethod
+    def _topk_idx(mags: jnp.ndarray, k: int) -> jnp.ndarray:
+        """Deterministic top-k positions along the last axis: stable sort by
+        descending magnitude (ties keep ascending index order), then the
+        selected k re-sorted to the canonical ascending-index wire order."""
+        iota = jax.lax.broadcasted_iota(jnp.int32, mags.shape, mags.ndim - 1)
+        _, idx = jax.lax.sort(
+            (-mags.astype(jnp.float32), iota),
+            dimension=-1, num_keys=1, is_stable=True,
+        )
+        return jnp.sort(idx[..., :k], axis=-1)
+
     def encode(self, delta_vec: jnp.ndarray):
         n = delta_vec.shape[0]
-        _, idx = jax.lax.top_k(jnp.abs(delta_vec), self.k_of(n))
+        idx = self._topk_idx(jnp.abs(delta_vec), self.k_of(n))
         return {"idx": idx, "val": delta_vec[idx], "n": n}
 
     def decode(self, enc) -> jnp.ndarray:
-        return jnp.zeros((enc["n"],), enc["val"].dtype).at[enc["idx"]].set(enc["val"])
+        # scatter-ADD: duplicate indices accumulate (kernel semantics)
+        return jnp.zeros((enc["n"],), enc["val"].dtype).at[enc["idx"]].add(enc["val"])
 
     def encode_batch(self, deltas: jnp.ndarray):
         n = deltas.shape[1]
-        _, idx = jax.lax.top_k(jnp.abs(deltas), self.k_of(n))  # (C, k)
+        idx = self._topk_idx(jnp.abs(deltas), self.k_of(n))  # (C, k)
         return {"idx": idx, "val": jnp.take_along_axis(deltas, idx, axis=1), "n": n}
 
     def decode_batch(self, enc) -> jnp.ndarray:
+        """Densify fallback: the dense (C, n) matrix for callers that want
+        it — the reduce and error-feedback paths never call this."""
         c = enc["idx"].shape[0]
         rows = jnp.arange(c)[:, None]
         return (
             jnp.zeros((c, enc["n"]), enc["val"].dtype)
             .at[rows, enc["idx"]]
-            .set(enc["val"])
+            .add(enc["val"])
         )
 
+    def aggregate_batch(self, deltas: jnp.ndarray, weights: jnp.ndarray, state):
+        """O(C·k) end to end: encode, scatter-reduce straight off the
+        payload, and zero the transmitted coordinates out of the error-
+        feedback state — TopK transmits exact values, so
+        ``eff - decode(enc) == eff`` zeroed at idx; no dense decode."""
+        eff = deltas + state
+        enc = self.encode_batch(eff)
+        rows = jnp.arange(eff.shape[0])[:, None]
+        new_state = eff.at[rows, enc["idx"]].set(0.0)
+        return self.reduce(enc, weights), new_state
+
+    def transmit_tree(self, delta_tree: PyTree, state_row):
+        """Per-client path (mesh shard_map / sequential scan): the decode
+        stays per-client (N,) — never (C, N) — and the next state row zeroes
+        the transmitted coordinates in O(k)."""
+        vec = tree_flatten_to_vector(delta_tree) + state_row
+        enc = self.encode(vec)
+        new_row = vec.at[enc["idx"]].set(0.0)
+        return tree_unflatten_from_vector(self.decode(enc), delta_tree), new_row
+
     def reduce(self, enc, weights: jnp.ndarray, *, interpret: bool = False):
-        # sparse payload: densify per client, then the weighted-reduce kernel
-        return ops.fedavg_reduce(self.decode_batch(enc), weights, interpret=interpret)
+        # sparse scatter-accumulate straight off the (idx, val) payload
+        return ops.topk_scatter_reduce(
+            enc["idx"], enc["val"], weights, enc["n"], interpret=interpret
+        )
 
 
 @dataclass(frozen=True)

@@ -23,7 +23,8 @@ Three mesh mappings (DESIGN.md §4), every one codec-aware:
   carried residual) are encoded and the server aggregates straight off the
   encoded payload (``codec.aggregate_batch`` — for Int8 the fused
   dequantize+weighted-reduce Pallas kernel: one HBM pass over the int8
-  payload).
+  payload; for TopK the scatter-accumulate kernel over the (idx, val)
+  payloads: O(C·k), the dense (C, n_params) delta matrix is never built).
 - **parallel + mesh**: clients map 1:1 onto ``client_axes`` via shard_map
   (manual over client axes, auto over model axes).  Each client's delta is
   encoded *before* the hierarchical cross-client/cross-pod psum — the slow

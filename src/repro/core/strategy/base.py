@@ -25,7 +25,9 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.utils.pytree import tree_scale, tree_sub
+from repro.utils.pytree import (
+    tree_flatten_to_vector, tree_scale, tree_sub, tree_unflatten_from_vector,
+)
 
 from ..protocol import (
     ClientProperties, CompressedParameters, FitIns, FitRes, Parameters,
@@ -98,7 +100,14 @@ class Strategy:
     def aggregate_fit(
         self, rnd: int, results: list[tuple[int, FitRes]], global_params: PyTree
     ) -> PyTree:
-        """Default: examples-weighted average of returned parameters."""
+        """Default: examples-weighted average of returned parameters.
+
+        A homogeneous-TopK fleet takes the sparse path: the serialized
+        (idx, val) wire payloads feed the scatter-accumulate kernel directly
+        — O(C·k), no per-client dense decode, no stacked (C, ...) params.
+        Mixed-codec fleets (and raw-pytree transports) densify per client as
+        before.
+        """
         weights = jnp.asarray(
             [float(r.num_examples) for _, r in results], jnp.float32
         )
@@ -106,12 +115,100 @@ class Strategy:
             # every sampled client reported zero examples: fall back to an
             # unweighted mean instead of poisoning the global with NaNs
             weights = jnp.ones_like(weights)
+        sparse = self._aggregate_fit_topk(rnd, results, weights, global_params)
+        if sparse is not None:
+            return sparse
         trees = [self.fitres_parameters(r, global_params) for _, r in results]
         stacked = jax.tree.map(
             lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees
         )
         new_global, _ = self.aggregate(
             stacked, weights, global_params, self.init_state(global_params), rnd
+        )
+        return new_global
+
+    def _sparse_fit_compatible(self) -> bool:
+        """The sparse fast path computes weighted-mean + ``server_update``;
+        that composition is only known to equal ``aggregate`` for the
+        in-tree linear aggregators.  A subclass overriding ``aggregate``
+        (robust aggregation: median, trimmed mean, ...) or pairing a stock
+        ``aggregate`` with a custom ``server_update`` automatically falls
+        back to the densify path — identity checks on the class attributes,
+        so overrides anywhere in the MRO disqualify."""
+        from .fedavg import FedAvg
+        from .fedopt import FedOpt
+        from .fedprox import FedProx
+        from .fedtau import FedTau
+
+        cls = type(self)
+        if cls.aggregate in (FedAvg.aggregate, FedProx.aggregate, FedTau.aggregate):
+            return cls.server_update is Strategy.server_update
+        if cls.aggregate is FedOpt.aggregate:
+            return cls.server_update is FedOpt.server_update
+        return False
+
+    def _aggregate_fit_topk(
+        self, rnd: int, results, weights: jnp.ndarray, global_params: PyTree
+    ) -> PyTree | None:
+        """Sparse aggregation of an all-TopK round, or None to densify.
+
+        Deserializes every client's (idx, val) payload, pads rows to the
+        fleet max k (index 0 / value 0 — a zero-value scatter contributes
+        nothing), scatter-reduces, and hands the reduced average to
+        ``server_update`` — the same consumer the jitted engine uses, and
+        identical to ``aggregate`` over stacked decoded params for every
+        strategy ``_sparse_fit_compatible`` admits (FedAvg/FedProx/FedTau:
+        weighted mean; FedOpt: pseudo-gradient of the mean).
+        """
+        from repro.kernels import ops
+
+        from ..compression import TopKCodec
+
+        if not results or not self._sparse_fit_compatible():
+            return None
+        payloads = []
+        for _, res in results:
+            cp = res.parameters
+            # exact type, not isinstance: a TopKCodec subclass may redefine
+            # the wire format (from_wire/decode), which only the dense path
+            # interprets correctly
+            if not isinstance(cp, CompressedParameters) or type(cp.codec) is not TopKCodec:
+                return None
+            payloads.append(cp)
+        n_params = payloads[0].n_params
+        if any(cp.n_params != n_params for cp in payloads):
+            return None
+
+        from ..protocol import _decode_array
+
+        rows = []
+        for cp in payloads:
+            # rebuild the decodable payload exactly as wire_to_pytree does:
+            # aux scalars + deserialized arrays through codec.from_wire
+            payload = dict(cp.aux)
+            for key, buf, (dtype, shape) in zip(cp.fields, cp.tensors, cp.manifest):
+                payload[key] = _decode_array(buf, dtype, shape)
+            enc = cp.codec.from_wire(payload)
+            if not {"idx", "val"} <= set(enc):
+                return None
+            rows.append((jnp.asarray(enc["idx"]).reshape(-1),
+                         jnp.asarray(enc["val"]).reshape(-1)))
+        k_max = max(int(i.shape[0]) for i, _ in rows)
+        if k_max == 0:
+            return global_params
+        idx = jnp.stack([
+            jnp.pad(i.astype(jnp.int32), (0, k_max - i.shape[0])) for i, _ in rows
+        ])
+        val = jnp.stack([
+            jnp.pad(v.astype(jnp.float32), (0, k_max - v.shape[0])) for _, v in rows
+        ])
+        avg_delta = ops.topk_scatter_reduce(idx, val, weights, n_params)
+        flat_global = tree_flatten_to_vector(global_params)
+        avg_params = tree_unflatten_from_vector(
+            flat_global + avg_delta, global_params
+        )
+        new_global, _ = self.server_update(
+            avg_params, global_params, self.init_state(global_params), rnd
         )
         return new_global
 

@@ -2,10 +2,14 @@
 
 Models call these; on TPU they route to the Pallas kernels, elsewhere to the
 pure-jnp oracles in ref.py (which is also what the CPU dry-run lowers).
-``set_impl`` lets tests force either path, and ``interpret=True`` runs the
-Pallas kernel bodies on CPU for the per-kernel allclose tests.
+``set_impl`` lets tests force either path (the ``REPRO_KERNEL_IMPL`` env
+var sets the same switch at import, which is how CI forces the Pallas
+bodies through interpret mode on its CPU runners), and ``interpret=True``
+runs the Pallas kernel bodies on CPU for the per-kernel allclose tests.
 """
 from __future__ import annotations
+
+import os
 
 from functools import partial
 
@@ -14,7 +18,13 @@ import jax.numpy as jnp
 
 from . import ref
 
-_IMPL = "auto"  # "auto" | "pallas" | "reference"
+_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "auto").strip()
+if _IMPL not in ("auto", "pallas", "reference"):
+    # fail loud: a typo here would silently turn the CI pallas-interpret job
+    # into a ref.py run that tests zero kernel bodies
+    raise ValueError(
+        f"REPRO_KERNEL_IMPL={_IMPL!r}: expected auto | pallas | reference"
+    )
 
 
 def set_impl(impl: str) -> None:
@@ -100,6 +110,36 @@ def dequant_reduce(q, scales, weights, block: int = 256, *, interpret=False):
                 interpret=interpret or jax.default_backend() != "tpu",
             )
     return ref.dequant_reduce(q, scales, weights, block=block)
+
+
+# count of sparse-path dispatches (trace-time): benchmarks/compression_bench
+# --smoke asserts this moves when TopK aggregates, so the scatter path cannot
+# silently regress to densify-then-reduce
+_TOPK_SPARSE_CALLS = 0
+
+
+def topk_sparse_calls() -> int:
+    return _TOPK_SPARSE_CALLS
+
+
+def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret=False):
+    """Sparse TopK aggregation: (C,k) idx/val + (C,) weights -> (N,) mean.
+
+    O(C·k) on every branch — the Pallas kernel keeps the (N,) accumulator
+    VMEM-resident (so it only runs when N fits); above that, the XLA
+    scatter-add oracle.  Neither materializes a dense (C, N) matrix.
+    """
+    global _TOPK_SPARSE_CALLS
+    _TOPK_SPARSE_CALLS += 1
+    if _use_pallas() or interpret:
+        from .scatter_reduce import VMEM_ELEMS, topk_scatter_reduce as sr
+
+        if n_params <= VMEM_ELEMS:
+            return sr(
+                idx, val, weights, n_params,
+                interpret=interpret or jax.default_backend() != "tpu",
+            )
+    return ref.topk_scatter_reduce(idx, val, weights, n_params)
 
 
 # ---------------- int8 codec ----------------

@@ -257,6 +257,33 @@ def fedavg_reduce(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     return (acc / safe_weight_sum(wf)).astype(updates.dtype)
 
 
+def topk_scatter_reduce(
+    idx: jnp.ndarray,      # (C, k) int32 sparse positions
+    val: jnp.ndarray,      # (C, k) fp sparse values
+    weights: jnp.ndarray,  # (C,) aggregation weights
+    n_params: int,
+) -> jnp.ndarray:
+    """O(C·k) oracle for the scatter-accumulate kernel: one XLA scatter-add
+    of every client's weighted payload into a zero (N,) accumulator — the
+    dense (C, N) per-client matrix is never built.  Duplicate indices within
+    a client accumulate; weights follow ``safe_weight_sum`` semantics;
+    out-of-range indices (corrupt wire) are dropped — masked explicitly, so
+    a negative index cannot wrap numpy-style into a valid coordinate."""
+    c, k = idx.shape
+    wf = weights.astype(jnp.float32)
+    if k == 0 or c == 0:
+        return jnp.zeros((n_params,), jnp.float32)
+    valid = (idx >= 0) & (idx < n_params)
+    safe_idx = jnp.where(valid, idx, 0)
+    contrib = jnp.where(valid, val.astype(jnp.float32), 0.0) * wf[:, None]
+    acc = (
+        jnp.zeros((n_params,), jnp.float32)
+        .at[safe_idx.reshape(-1)]
+        .add(contrib.reshape(-1))
+    )
+    return acc / safe_weight_sum(wf)
+
+
 # --------------------------------------------------------------------------
 # int8 block quantization (update compression codec)
 # --------------------------------------------------------------------------

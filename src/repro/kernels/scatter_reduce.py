@@ -1,0 +1,105 @@
+"""Fused TopK scatter-accumulate weighted reduce (Pallas TPU) — the
+server-side aggregation of sparse (idx, val) uplinks in O(C·k).
+
+Input is the TopK wire payload of every client: idx (C, k) int32 positions
+and val (C, k) fp32 magnitudes, plus the (C,) aggregation weights.  The
+densify baseline scatters every client into a dense (C, N) fp32 matrix and
+then runs the weighted reduce over it — O(C·N) time AND memory, defeating
+the whole point of shipping k << N entries.  This kernel never builds that
+matrix: grid = (C,), the (N,) fp32 output accumulator stays resident in
+VMEM across all C grid steps (same out-block index every step), and each
+step scatters one client's k weighted values into it:
+
+    out[idx[c, j]] += w_c * val[c, j]        for j < k
+
+HBM traffic is the C·k·8-byte payload plus one (N,) result write — the
+wire itself is the roofline.  The inner scatter is a fori_loop of k
+single-element read-modify-writes against VMEM; that serializes k
+lane-granular ops per client, which is the price of arbitrary indices on a
+vector unit, but VMEM latency is ~2 orders below HBM and k << N, so the
+loop stays far under the dense path's C·N·4-byte HBM cost.
+
+Contract (mirrors ``ref.topk_scatter_reduce``):
+- duplicate indices within a client ACCUMULATE (scatter-add, not set);
+- weights are auto-normalized with ``safe_weight_sum`` semantics: an
+  all-zero weight vector yields a zero average, never NaNs;
+- k == 0 (a payload with no entries) yields the zero vector;
+- out-of-range indices (negative or >= N — a corrupt/hostile wire
+  payload) are DROPPED, identically on kernel and oracle: both sanitize
+  before scattering, so neither raw-VMEM writes (here) nor numpy-style
+  negative wrapping (XLA scatter) can leak into the aggregate;
+- N needs no alignment: the output is lane-padded internally and the pad
+  is sliced off (in-range indices never touch the pad).
+
+Fallback: the (N,) accumulator must fit in VMEM, so ``ops`` dispatches to
+the XLA scatter-add oracle above ``VMEM_ELEMS`` — still O(C·k), just not
+fused.  The only remaining densify path is ``TopKCodec.decode_batch``,
+which exists for callers that *want* the dense per-client matrix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.utils.pytree import safe_weight_sum
+
+# fp32 elements of the VMEM-resident output accumulator (~8 MB of the
+# ~16 MB/core budget, leaving room for the payload blocks)
+VMEM_ELEMS = 1 << 21
+
+
+def _scatter_reduce_kernel(idx_ref, val_ref, w_ref, o_ref, *, k: int):
+    c = pl.program_id(0)
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[0, c]
+
+    def body(j, carry):
+        i = idx_ref[0, j]
+        o_ref[pl.ds(i, 1)] = o_ref[pl.ds(i, 1)] + (w * val_ref[0, j]).reshape(1)
+        return carry
+
+    jax.lax.fori_loop(0, k, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_params", "interpret"))
+def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret: bool = False):
+    """(C,k) int32 x (C,k) fp x (C,) -> (N,) fp32 weighted mean of the
+    scattered sparse updates (weights auto-normalized)."""
+    c, k = idx.shape
+    assert val.shape == (c, k), (val.shape, idx.shape)
+    if k == 0 or c == 0:
+        return jnp.zeros((n_params,), jnp.float32)
+
+    # sanitize the wire: out-of-range indices contribute nothing (idx -> 0
+    # with val -> 0), so the unchecked VMEM store below cannot be steered
+    # outside the accumulator by a corrupt payload
+    idx = idx.astype(jnp.int32)
+    valid = (idx >= 0) & (idx < n_params)
+    idx = jnp.where(valid, idx, 0)
+    val = jnp.where(valid, val.astype(jnp.float32), 0.0)
+
+    pad = (-n_params) % 128  # lane-aligned accumulator; idx < N stays clear
+    np_ = n_params + pad
+    wf = weights.astype(jnp.float32)
+    wn = (wf / safe_weight_sum(wf)).reshape(1, c)
+
+    out = pl.pallas_call(
+        functools.partial(_scatter_reduce_kernel, k=k),
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((np_,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=interpret,
+    )(idx, val, wn)
+    return out[:n_params] if pad else out

@@ -363,6 +363,130 @@ def test_topk_codec_keeps_largest():
     assert float(jnp.abs(dec[:90]).sum()) == 0.0
 
 
+def _topk_fit_results(codec, global_params, n_clients, seed=0):
+    from repro.core import FitRes
+    from repro.utils.pytree import tree_size
+
+    rng = np.random.default_rng(seed)
+    n = tree_size(global_params)
+    out = []
+    for c in range(n_clients):
+        newp = jax.tree.map(
+            lambda x: x + 0.02 * jnp.asarray(rng.normal(size=x.shape), x.dtype),
+            global_params,
+        )
+        enc, _ = compress_update(codec, newp, global_params)
+        out.append((c, FitRes(parameters=compress_to_wire(codec, enc, n),
+                              num_examples=10 + 3 * c)))
+    return out
+
+
+@pytest.mark.parametrize("strategy_cls", [FedAvg, FedProx])
+def test_aggregate_fit_topk_sparse_path_matches_dense(strategy_cls):
+    """A homogeneous-TopK fleet takes the O(C·k) sparse path; for the linear
+    aggregators it must agree with the per-client densify path to 1e-5."""
+    rng = np.random.default_rng(5)
+    gp = {"a": jnp.asarray(rng.normal(size=(30, 10)), jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(17,)), jnp.float32)}
+    results = _topk_fit_results(TopKCodec(frac=0.1), gp, n_clients=4)
+    strat = strategy_cls()
+    weights = jnp.asarray([float(r.num_examples) for _, r in results])
+
+    sparse = strat._aggregate_fit_topk(0, results, weights, gp)
+    assert sparse is not None, "all-TopK fleet must select the sparse path"
+    trees = [strat.fitres_parameters(r, gp) for _, r in results]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    dense, _ = strat.aggregate(stacked, weights, gp, strat.init_state(gp), 0)
+    for k in gp:
+        np.testing.assert_allclose(
+            np.asarray(sparse[k]), np.asarray(dense[k]), atol=1e-5, rtol=1e-5
+        )
+    # aggregate_fit itself returns the sparse result bit-for-bit
+    full = strat.aggregate_fit(0, results, gp)
+    for k in gp:
+        np.testing.assert_array_equal(np.asarray(full[k]), np.asarray(sparse[k]))
+
+
+def test_aggregate_fit_topk_sparse_path_fedopt():
+    """FedOpt over the sparse path: the pseudo-gradient is EXACTLY zero at
+    coordinates no client transmitted, so adam leaves them untouched —
+    unlike the dense leafwise mean, whose fp noise (~1e-8) gets amplified
+    by adam's sign-like first step into spurious lr-scale movement.  The
+    transmitted coordinates agree with the dense path."""
+    rng = np.random.default_rng(5)
+    gp = {"w": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+    results = _topk_fit_results(TopKCodec(frac=0.1), gp, n_clients=4)
+    strat = FedAdam()
+    weights = jnp.asarray([float(r.num_examples) for _, r in results])
+    sparse = strat._aggregate_fit_topk(0, results, weights, gp)
+    assert sparse is not None
+
+    touched = np.zeros(300, bool)
+    for _, res in results:
+        cp = res.parameters
+        for key, buf, (dtype, shape) in zip(cp.fields, cp.tensors, cp.manifest):
+            if key == "idx":
+                touched[np.frombuffer(buf, dtype=dtype)] = True
+    # untransmitted coordinates: exactly unchanged (g == 0 -> adam no-op)
+    np.testing.assert_array_equal(
+        np.asarray(sparse["w"])[~touched], np.asarray(gp["w"])[~touched]
+    )
+    # transmitted coordinates: match the densify path
+    trees = [strat.fitres_parameters(r, gp) for _, r in results]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    dense, _ = strat.aggregate(stacked, weights, gp, strat.init_state(gp), 0)
+    np.testing.assert_allclose(
+        np.asarray(sparse["w"])[touched], np.asarray(dense["w"])[touched],
+        atol=1e-3,
+    )
+
+
+def test_aggregate_fit_custom_aggregate_override_falls_back():
+    """A Strategy subclass with a custom ``aggregate`` (e.g. robust median
+    aggregation) must NOT be silently replaced by the sparse weighted-mean
+    fast path — it falls back to the densify path that honors the override."""
+    class MedianStrategy(FedAvg):
+        def aggregate(self, client_params, weights, global_params, server_state, rnd):
+            med = jax.tree.map(lambda x: jnp.median(x, axis=0), client_params)
+            return med, server_state
+
+    rng = np.random.default_rng(8)
+    gp = {"w": jnp.asarray(rng.normal(size=(200,)), jnp.float32)}
+    results = _topk_fit_results(TopKCodec(frac=0.1), gp, n_clients=3)
+    strat = MedianStrategy()
+    weights = jnp.asarray([float(r.num_examples) for _, r in results])
+    assert not strat._sparse_fit_compatible()
+    assert strat._aggregate_fit_topk(0, results, weights, gp) is None
+    # the full call routes through the override: result == leafwise median
+    out = strat.aggregate_fit(0, results, gp)
+    trees = [strat.fitres_parameters(r, gp) for _, r in results]
+    exp = jnp.median(jnp.stack([t["w"] for t in trees]), axis=0)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(exp), atol=1e-6)
+    # while the stock strategies stay eligible
+    assert FedAvg()._sparse_fit_compatible()
+    assert FedProx()._sparse_fit_compatible()
+    assert FedAdam()._sparse_fit_compatible()
+
+
+def test_aggregate_fit_mixed_codec_fleet_falls_back_to_densify():
+    """One Int8 client in the fleet -> the sparse fast path declines and the
+    stacked densify path produces the answer (documented densify case)."""
+    rng = np.random.default_rng(6)
+    gp = {"w": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+    results = _topk_fit_results(TopKCodec(frac=0.1), gp, n_clients=3)
+    from repro.core import FitRes
+
+    newp = {"w": gp["w"] + 0.02 * jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+    enc, _ = compress_update(Int8Codec(), newp, gp)
+    results.append((3, FitRes(parameters=compress_to_wire(Int8Codec(), enc, 300),
+                              num_examples=10)))
+    strat = FedAvg()
+    weights = jnp.asarray([float(r.num_examples) for _, r in results])
+    assert strat._aggregate_fit_topk(0, results, weights, gp) is None
+    out = strat.aggregate_fit(0, results, gp)  # densify path still works
+    assert out["w"].shape == (300,)
+
+
 # ---------------- data ----------------
 def test_dirichlet_partition_covers_all_sizes():
     data = make_classification(n=1000, num_classes=10, shape=(8,), seed=0)

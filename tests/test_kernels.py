@@ -154,6 +154,142 @@ def test_dequant_reduce_matches_oracle(c, n, bn):
     np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused), atol=2e-5, rtol=2e-5)
 
 
+# ---------------- TopK scatter-accumulate reduce ----------------
+from repro.kernels.scatter_reduce import topk_scatter_reduce
+
+
+def _sparse_payload(c, k, n, seed, dup=False):
+    rng = np.random.default_rng(seed)
+    if dup and k > 1:
+        # force duplicate indices within each client (they must ACCUMULATE)
+        pool = rng.integers(0, n, (c, max(1, k // 2)))
+        idx = pool[:, rng.integers(0, pool.shape[1], k)]
+    else:
+        idx = np.stack([rng.choice(n, size=k, replace=False) for _ in range(c)])
+    val = rng.normal(size=(c, k)).astype(np.float32)
+    w = (rng.random(c) + 0.1).astype(np.float32)
+    return jnp.asarray(idx, jnp.int32), jnp.asarray(val), jnp.asarray(w)
+
+
+def _dense_of(idx, val, n):
+    """Densify a sparse payload with np.add.at (duplicates accumulate)."""
+    c = idx.shape[0]
+    dense = np.zeros((c, n), np.float32)
+    for i in range(c):
+        np.add.at(dense[i], np.asarray(idx[i]), np.asarray(val[i]))
+    return jnp.asarray(dense)
+
+
+@pytest.mark.parametrize("c,k,n", [(4, 64, 8192), (8, 10, 1000), (2, 512, 4096)])
+def test_topk_scatter_reduce_matches_dense_reference(c, k, n):
+    idx, val, w = _sparse_payload(c, k, n, seed=c * 1000 + k)
+    out = topk_scatter_reduce(idx, val, w, n, interpret=True)
+    exp = ref.fedavg_reduce(_dense_of(idx, val, n), w)
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ref.topk_scatter_reduce(idx, val, w, n)), np.asarray(exp),
+        atol=1e-5, rtol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("c,k,n", [(4, 32, 2048), (3, 7, 100)])
+def test_topk_scatter_reduce_duplicate_indices_accumulate(c, k, n):
+    """Duplicate indices within one client sum, exactly like np.add.at."""
+    idx, val, w = _sparse_payload(c, k, n, seed=42, dup=True)
+    out = topk_scatter_reduce(idx, val, w, n, interpret=True)
+    exp = ref.fedavg_reduce(_dense_of(idx, val, n), w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+
+def test_topk_scatter_reduce_k_zero_clients():
+    """k == 0 (empty payloads) and zero-value padding rows both yield the
+    contribution-free result on kernel and oracle alike."""
+    n = 500
+    for fn in (lambda i, v, w: topk_scatter_reduce(i, v, w, n, interpret=True),
+               lambda i, v, w: ref.topk_scatter_reduce(i, v, w, n)):
+        out = fn(jnp.zeros((3, 0), jnp.int32), jnp.zeros((3, 0), jnp.float32),
+                 jnp.ones(3))
+        assert out.shape == (n,) and not np.asarray(out).any()
+    # a client padded with val=0 entries (heterogeneous k) contributes nothing
+    idx, val, w = _sparse_payload(4, 16, n, seed=7)
+    val = val.at[2].set(0.0)
+    out = topk_scatter_reduce(idx, val, w, n, interpret=True)
+    exp = ref.fedavg_reduce(_dense_of(idx, val, n), w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+
+def test_topk_scatter_reduce_out_of_range_indices_dropped():
+    """A corrupt wire payload (idx < 0 or >= N) must be dropped identically
+    by kernel and oracle — no negative wrapping, no out-of-block write."""
+    n = 256
+    idx = jnp.asarray([[0, -1, n, 5, 2**30, 255]], jnp.int32)
+    val = jnp.ones((1, 6), jnp.float32)
+    w = jnp.ones(1)
+    exp = np.zeros(n, np.float32)
+    exp[[0, 5, 255]] = 1.0  # only the in-range entries land
+    for out in (topk_scatter_reduce(idx, val, w, n, interpret=True),
+                ref.topk_scatter_reduce(idx, val, w, n)):
+        np.testing.assert_allclose(np.asarray(out), exp, atol=1e-6)
+
+
+def test_topk_scatter_reduce_zero_weight_vector():
+    """safe_weight_sum semantics: all-zero weights -> zeros, never NaNs."""
+    idx, val, _ = _sparse_payload(4, 32, 1024, seed=3)
+    out = topk_scatter_reduce(idx, val, jnp.zeros(4), 1024, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    out_ref = ref.topk_scatter_reduce(idx, val, jnp.zeros(4), 1024)
+    np.testing.assert_array_equal(np.asarray(out_ref), 0.0)
+
+
+@pytest.mark.parametrize("n", [100, 5000, 8193, 129])
+def test_topk_scatter_reduce_tail_indices(n):
+    """Regression (fedavg_reduce tail-drop class): indices in the last,
+    non-lane-aligned tail of the output must land, not vanish in pad."""
+    c, k = 3, 8
+    rng = np.random.default_rng(n)
+    idx = jnp.asarray(rng.integers(0, n, (c, k)), jnp.int32)
+    idx = idx.at[:, -1].set(n - 1).at[:, 0].set(0)  # pin both boundaries
+    val = jnp.asarray(rng.normal(size=(c, k)), jnp.float32)
+    w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+    out = topk_scatter_reduce(idx, val, w, n, interpret=True)
+    exp = ref.fedavg_reduce(_dense_of(idx, val, n), w)
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+    assert np.asarray(out)[-1] == pytest.approx(float(exp[-1]), abs=1e-5)
+
+
+def test_topk_codec_reduce_hits_scatter_kernel():
+    """The codec's reduce on a REAL encoded payload == dense decode+reduce,
+    on both the interpret-mode kernel and the dispatch path."""
+    from repro.core.compression import TopKCodec
+    from repro.kernels import ops
+
+    codec = TopKCodec(frac=0.05)
+    rng = np.random.default_rng(0)
+    deltas = jnp.asarray(rng.normal(size=(6, 3000)) * 0.01, jnp.float32)
+    w = jnp.asarray(rng.random(6) + 0.1, jnp.float32)
+    enc = codec.encode_batch(deltas)
+    exp = ref.fedavg_reduce(codec.decode_batch(enc), w)
+    for out in (
+        codec.reduce(enc, w),                       # dispatch (ref on CPU)
+        codec.reduce(enc, w, interpret=True),       # Pallas interpret body
+        ops.topk_scatter_reduce(enc["idx"], enc["val"], w, 3000),
+    ):
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(c=st.integers(1, 6), k=st.integers(1, 64), seed=st.integers(0, 1000))
+def test_topk_scatter_reduce_property(c, k, seed):
+    n = 2048
+    idx, val, w = _sparse_payload(c, k, n, seed=seed, dup=(seed % 2 == 0))
+    out = topk_scatter_reduce(idx, val, w, n, interpret=True)
+    exp = ref.fedavg_reduce(_dense_of(idx, val, n), w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     c=st.integers(2, 8),
