@@ -23,6 +23,12 @@ Five sections, CSV rows like benchmarks/run.py:
    ``aggregate_batch``/``reduce`` through the sparse scatter dispatch and
    NEVER through ``decode_batch`` densification (a regression here fails
    the benchmark, which CI runs with ``--smoke``).
+6. ``mixed[...]``   — mixed-fleet sweep: a Pixel→TopK / Jetson→Int8 /
+   TPU→Null fleet aggregated by ONE ``MixedCodec.aggregate_batch`` (each
+   group on its own kernel path) — fleet wire bytes + reduce time next to
+   every single-codec fleet baseline, with a guard that the mixed fleet
+   ships strictly less wire than the uncompressed one and that the TopK
+   group is never densified.
 
   PYTHONPATH=src python -m benchmarks.compression_bench [--fast|--smoke]
 
@@ -287,20 +293,11 @@ def check_sparse_path_selected() -> list[str]:
     w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
     state = codec.init_client_state(c, n)
 
+    from repro.core.compression import ban_topk_densify
+
     before = ops.topk_sparse_calls()
-    orig = TopKCodec.decode_batch
-
-    def _boom(self, enc):  # any densify on the aggregation path is banned
-        raise AssertionError(
-            "TopKCodec.decode_batch called on the aggregation path — the "
-            "O(C·k) scatter reduce has regressed to densify"
-        )
-
-    TopKCodec.decode_batch = _boom
-    try:
+    with ban_topk_densify():  # any densify on the aggregation path is banned
         avg, new_state = codec.aggregate_batch(deltas, w, state)
-    finally:
-        TopKCodec.decode_batch = orig
     calls = ops.topk_sparse_calls() - before
     assert calls >= 1, "sparse scatter dispatch was never reached"
 
@@ -311,6 +308,50 @@ def check_sparse_path_selected() -> list[str]:
                                atol=1e-5, rtol=1e-5)
     err = float(np.max(np.abs(np.asarray(avg) - np.asarray(exp))))
     return [f"sparse[topk_path_selected],0,dispatches={calls};max_err_vs_dense={err:.2e}"]
+
+
+# ---------------------------------------------------------------- section 6
+def bench_mixed_fleet(fast: bool) -> list[str]:
+    """Heterogeneous fleet through ONE grouped aggregate vs single-codec
+    fleets of the same size: per-fleet wire bytes and reduce time."""
+    from repro.core import BandwidthCodecPolicy, MixedCodec
+    from repro.core.cost_model import PROFILES
+
+    sweep = [(6, 1 << 14)] if fast else [(6, 1 << 16), (12, 1 << 18)]
+    device_cycle = ("pixel-4", "jetson-tx2-gpu", "tpu-v5e-chip")
+    rows = []
+    rng = np.random.default_rng(0)
+    for c, n in sweep:
+        fleet = [PROFILES[device_cycle[i % 3]] for i in range(c)]
+        mixed = MixedCodec.from_policy(BandwidthCodecPolicy(), fleet)
+        deltas = jnp.asarray(rng.normal(size=(c, n)) * 0.01, jnp.float32)
+        w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+
+        base = {}
+        for name, codec in CODECS.items():
+            fn = jax.jit(
+                lambda d, w, s, codec=codec: codec.aggregate_batch(d, w, s)[0]
+            )
+            us = _timeit_median(fn, deltas, w, codec.init_client_state(c, n))
+            base[name] = (us, codec.wire_bytes(n) * c)
+
+        # the TopK group must stay sparse inside the mixed aggregate too
+        from repro.core.compression import ban_topk_densify
+
+        with ban_topk_densify():
+            fn_m = jax.jit(lambda d, w, s: mixed.aggregate_batch(d, w, s)[0])
+            us_m = _timeit_median(fn_m, deltas, w, mixed.init_client_state(c, n))
+        wire_m = sum(mixed.wire_bytes(n))
+        assert wire_m < base["fp32"][1], "mixed fleet must ship less than fp32"
+        derived = ";".join(
+            f"{name}_us={us:.0f};{name}_wire={wb}" for name, (us, wb) in base.items()
+        )
+        rows.append(
+            f"mixed[fleet_C{c}_N{n}],{us_m:.0f},"
+            f"fleet_wire_bytes={wire_m};"
+            f"wire_vs_fp32={base['fp32'][1] / wire_m:.2f}x;{derived}"
+        )
+    return rows
 
 
 def main() -> None:
@@ -334,6 +375,8 @@ def main() -> None:
     for row in bench_topk_reduce(args.fast or args.smoke):
         print(row)
     for row in check_sparse_path_selected():
+        print(row)
+    for row in bench_mixed_fleet(args.fast or args.smoke):
         print(row)
 
 

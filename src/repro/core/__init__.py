@@ -9,8 +9,8 @@ from .server import Server, History, RoundRecord, make_cost_model_for
 from .cost_model import CostModel, DeviceProfile, PROFILES, AWS_DEVICE_FARM
 from .rounds import RoundSpec, make_round_step, make_client_update
 from .compression import (
-    UpdateCodec, Int8Codec, TopKCodec, NullCodec, BandwidthCodecPolicy,
-    compress_update, decompress_update,
+    UpdateCodec, Int8Codec, TopKCodec, NullCodec, MixedCodec,
+    BandwidthCodecPolicy, compress_update, decompress_update,
 )
 from .strategy import (
     Strategy, FedAvg, FedProx, FedTau, FedOpt, FedAdam, FedYogi, FedAvgM,

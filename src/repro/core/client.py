@@ -144,7 +144,15 @@ class JaxClient(Client):
         batches = [self.dataset.next_batch(self.batch_size) for _ in range(full_steps)]
         stacked = {k: np.stack([b[k] for b in batches]) for k in batches[0]}
 
-        cache_key = (id(self.loss_fn), id(self.trainable_mask), full_steps, mu, lr)
+        # lr == 0.0 means the built closure captures self.optimizer, so the
+        # optimizer's identity must be part of the key — without it, two
+        # clients sharing a loss_fn but constructed with different
+        # optimizers (e.g. different SGD momenta) would silently share the
+        # first client's update rule
+        cache_key = (
+            id(self.loss_fn), id(self.trainable_mask), full_steps, mu, lr,
+            None if lr else id(self.optimizer),
+        )
         if cache_key not in _GLOBAL_FIT_CACHE:
             _GLOBAL_FIT_CACHE[cache_key] = self._build_fit(full_steps, mu, lr)
         fit_steps = _GLOBAL_FIT_CACHE[cache_key]

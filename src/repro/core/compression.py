@@ -34,12 +34,46 @@ The O(C·k) TopK reduce contract
   ``Strategy.aggregate_fit`` scatter-reduces serialized wire payloads when
   the whole fleet shipped TopK.
 - **When densify still applies**: ``decode_batch`` exists for callers that
-  explicitly want the dense per-client matrix, and ``aggregate_fit`` falls
-  back to dense decoding for mixed-codec fleets (some clients on Int8/
-  Null) — the homogeneous-TopK reduce itself never densifies.  The fused
-  kernel additionally requires the (n_params,) accumulator to fit VMEM;
-  above ``scatter_reduce.VMEM_ELEMS`` the dispatch falls back to the XLA
-  scatter-add oracle, which is still O(C·k).
+  explicitly want the dense per-client matrix — nothing on any reduce path
+  calls it.  The fused kernel additionally requires the (n_params,)
+  accumulator to fit VMEM; above ``scatter_reduce.VMEM_ELEMS`` the dispatch
+  falls back to the XLA scatter-add oracle, which is still O(C·k).
+
+Mixed-batch group semantics (``MixedCodec``)
+--------------------------------------------
+
+A heterogeneous fleet (some clients on TopK, some Int8, some fp32) runs
+inside ONE jitted ``round_step`` through ``MixedCodec``: a codec *bank*
+plus a static per-client group assignment (e.g. derived once from
+``BandwidthCodecPolicy`` over the fleet's ``DeviceProfile``s).  The
+contract extends the O(C·k) reduce contract group-wise:
+
+- **Trace-time partition**: the assignment is static python data, so the
+  client axis is partitioned into per-codec groups when the round step is
+  traced — every group is a fixed, shape-static slice of the batch, and
+  each group's encode + reduce runs on its own kernel path (TopK group →
+  scatter-accumulate, Int8 group → fused dequant+reduce, Null group →
+  ``fedavg_reduce`` on the flat surface / the leafwise mean on the pytree
+  surface).  The TopK group is still O(C_g·k): its payload is never
+  densified (``decode_batch`` stays off every mixed path too).
+- **One denominator**: each group contributes its *partial weighted sum*
+  (the group mean scaled back by the group's weight mass); the groups'
+  partials combine into one mean with a single ``safe_weight_sum``
+  denominator over the whole fleet, so the result equals a flat weighted
+  mean of the per-client decoded deltas up to fp rounding (the partials
+  are recovered as group-mean x weight mass) — an all-zero-weight group
+  contributes exactly zero, never NaNs.
+- **Per-group state**: ``init_client_state`` returns a *tuple* pytree, one
+  entry per bank codec — residual rows only for the groups whose codec
+  carries error feedback ((C_g, n_params) fp32), ``()`` for Null groups —
+  carried opaquely through the uniform ``round_step`` signature on the
+  vmap-parallel and sequential paths alike.
+- **Per-group wire accounting**: ``wire_bytes`` returns one uplink size
+  per client (the codec its group ships), which is what
+  ``CostModel.round_costs`` charges a mixed fleet.
+- The mesh shard_map path is NOT supported for ``MixedCodec`` (an SPMD
+  program cannot run a different wire format per device);
+  ``make_round_step`` rejects the combination at build time.
 
 Codecs operate on the *delta* (client params - global params), which is
 small-magnitude and quantizes well.  The ``UpdateCodec`` base class defines
@@ -68,6 +102,7 @@ the full surface the engine and protocol layer program against:
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any
 
@@ -391,6 +426,181 @@ class TopKCodec(UpdateCodec):
 
 
 @dataclass(frozen=True)
+class MixedCodec(UpdateCodec):
+    """Shape-static per-client codec bank — mixed fleets in ONE jitted round.
+
+    ``codecs`` is the bank (one entry per group); ``assignment`` maps each
+    client to a bank index and is *static python data*, so the round step
+    partitions the client axis into per-codec groups at trace time (see the
+    module docstring's mixed-batch group semantics).  Build one from the
+    fleet's measured hardware with ``MixedCodec.from_policy``.
+
+    The batched aggregation surfaces (``aggregate_updates`` /
+    ``aggregate_batch``) gather each group's rows with static indices, run
+    the group codec's own encode + reduce kernel path, and combine the
+    groups' partial weighted sums under a single ``safe_weight_sum``
+    denominator.  The per-client surfaces (``encode`` / ``transmit_tree``)
+    are deliberately absent: a single client belongs to exactly one group,
+    so callers must dispatch through ``groups()`` (the sequential round
+    engine does).
+    """
+
+    codecs: tuple = ()
+    assignment: tuple = ()
+
+    def __post_init__(self):
+        assert self.codecs, "MixedCodec needs a non-empty codec bank"
+        assert all(
+            0 <= int(g) < len(self.codecs) for g in self.assignment
+        ), f"assignment {self.assignment} out of range for {len(self.codecs)} codecs"
+        # tuples, not lists: the codec is a static field of RoundSpec and a
+        # jit-closure constant, so it must stay hashable
+        object.__setattr__(self, "codecs", tuple(self.codecs))
+        object.__setattr__(
+            self, "assignment", tuple(int(g) for g in self.assignment)
+        )
+
+    @classmethod
+    def from_policy(cls, policy, fleet) -> "MixedCodec":
+        """Static group assignment from per-device facts.
+
+        ``fleet``: one ``ClientProperties`` / ``DeviceProfile`` (anything
+        with ``.uplink_mbps``) per client, in client order; ``policy``: a
+        ``BandwidthCodecPolicy``-shaped object.  Equal codecs dedupe into
+        one bank entry (frozen dataclasses compare by config)."""
+        bank: list = []
+        assignment = []
+        for props in fleet:
+            codec = policy.codec_for(props)
+            if codec not in bank:
+                bank.append(codec)
+            assignment.append(bank.index(codec))
+        return cls(codecs=tuple(bank), assignment=tuple(assignment))
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.assignment)
+
+    def groups(self):
+        """-> [(bank_index, codec, client-index array)] for every NON-EMPTY
+        group, in bank order.  The index arrays are static numpy data: under
+        jit they become constant gathers, so every group is shape-static."""
+        assign = np.asarray(self.assignment, np.int64)
+        return [
+            (g, codec, np.flatnonzero(assign == g))
+            for g, codec in enumerate(self.codecs)
+            if (assign == g).any()
+        ]
+
+    # ---- per-client state: one entry per bank codec ----
+    def init_client_state(self, n_clients: int, n_params: int) -> PyTree:
+        assert n_clients == self.n_clients, (
+            f"MixedCodec assigns {self.n_clients} clients, got {n_clients}"
+        )
+        assign = np.asarray(self.assignment, np.int64)
+        return tuple(
+            codec.init_client_state(int((assign == g).sum()), n_params)
+            for g, codec in enumerate(self.codecs)
+        )
+
+    # ---- batched pytree surface: the vmap-parallel round step ----
+    def aggregate_updates(self, client_params, global_params, weights, state):
+        """Group-wise aggregation of vmapped client params.
+
+        Each group's rows are gathered with static indices and aggregated by
+        the group's own codec (TopK never densifies its payload, Null never
+        flattens the model); the group means are scaled back to partial
+        weighted sums and combined under one fleet-wide denominator."""
+        assert weights.shape[0] == self.n_clients, (
+            f"batch carries {weights.shape[0]} clients, MixedCodec assigns "
+            f"{self.n_clients}"  # a static gather would silently clamp
+        )
+        wf = weights.astype(jnp.float32)
+        wsum = safe_weight_sum(wf)
+        total = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), global_params
+        )
+        new_states = list(state)
+        for g, codec, idx in self.groups():
+            params_g = jax.tree.map(lambda x: x[idx], client_params)
+            avg_g, new_states[g] = codec.aggregate_updates(
+                params_g, global_params, wf[idx], state[g]
+            )
+            wsum_g = jnp.sum(wf[idx])  # group mean * mass = partial sum
+            total = jax.tree.map(
+                lambda t, a, gp: t
+                + (a.astype(jnp.float32) - gp.astype(jnp.float32)) * wsum_g,
+                total, avg_g, global_params,
+            )
+        new_global = jax.tree.map(
+            lambda gp, t: (gp.astype(jnp.float32) + t / wsum).astype(gp.dtype),
+            global_params, total,
+        )
+        return new_global, tuple(new_states)
+
+    # ---- batched flat surface ----
+    def aggregate_batch(self, deltas: jnp.ndarray, weights: jnp.ndarray, state):
+        assert deltas.shape[0] == self.n_clients, (
+            f"batch carries {deltas.shape[0]} clients, MixedCodec assigns "
+            f"{self.n_clients}"  # a static gather would silently clamp
+        )
+        wf = weights.astype(jnp.float32)
+        total = jnp.zeros((deltas.shape[1],), jnp.float32)
+        new_states = list(state)
+        for g, codec, idx in self.groups():
+            mean_g, new_states[g] = codec.aggregate_batch(
+                deltas[idx], wf[idx], state[g]
+            )
+            total = total + mean_g.astype(jnp.float32) * jnp.sum(wf[idx])
+        return total / safe_weight_sum(wf), tuple(new_states)
+
+    # ---- per-group wire accounting ----
+    def wire_bytes(self, n_params):
+        """One uplink size per client (its group's codec), in client order.
+
+        Accepts an int (every client ships an ``n_params``-sized update) or
+        a per-client vector of sizes; always returns a per-client list —
+        a mixed fleet has no single scalar wire size."""
+        ns = np.asarray(n_params).reshape(-1)
+        if ns.size == 1:
+            ns = np.full(self.n_clients, int(ns[0]))
+        assert len(ns) == self.n_clients, (
+            f"per-client size vector ({len(ns)}) != clients ({self.n_clients})"
+        )
+        return [
+            self.codecs[g]._wire_bytes_scalar(int(n))
+            for g, n in zip(self.assignment, ns)
+        ]
+
+    def _wire_bytes_scalar(self, n_params: int) -> int:
+        raise TypeError("MixedCodec has no scalar wire size; use wire_bytes")
+
+    def _no_per_client_surface(self, name: str):
+        raise TypeError(
+            f"MixedCodec.{name}: per-client codec surfaces are group-owned; "
+            "dispatch through groups()"
+        )
+
+    def encode(self, delta_vec):
+        self._no_per_client_surface("encode")
+
+    def decode(self, enc):
+        self._no_per_client_surface("decode")
+
+    def encode_batch(self, deltas):
+        self._no_per_client_surface("encode_batch")
+
+    def decode_batch(self, enc):
+        self._no_per_client_surface("decode_batch")
+
+    def reduce(self, enc, weights, *, interpret: bool = False):
+        self._no_per_client_surface("reduce")
+
+    def transmit_tree(self, delta_tree, state_row):
+        self._no_per_client_surface("transmit_tree")
+
+
+@dataclass(frozen=True)
 class BandwidthCodecPolicy:
     """Per-device codec selection from the client's measured uplink.
 
@@ -413,6 +623,27 @@ class BandwidthCodecPolicy:
         if properties.uplink_mbps < self.topk_below_mbps:
             return self.topk
         return self.int8
+
+
+@contextmanager
+def ban_topk_densify():
+    """Guard for the O(C·k) reduce contract: within the block, ANY call to
+    ``TopKCodec.decode_batch`` (the explicit densify fallback) raises.
+    Tests and the compression benchmark wrap aggregation paths in this to
+    prove the sparse scatter reduce never regresses to densify-then-reduce.
+    """
+    def _boom(self, enc):
+        raise AssertionError(
+            "TopKCodec.decode_batch called on the aggregation path — the "
+            "O(C·k) scatter reduce has regressed to densify"
+        )
+
+    orig = TopKCodec.decode_batch
+    TopKCodec.decode_batch = _boom
+    try:
+        yield
+    finally:
+        TopKCodec.decode_batch = orig
 
 
 def compress_update(

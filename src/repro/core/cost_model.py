@@ -161,14 +161,22 @@ class CostModel:
         return [int(u) for u in uplink_bytes]
 
     def round_comm_bytes(
-        self, n_clients: int, *, uplink_bytes: int | list[int] | None = None
+        self,
+        n_clients: int,
+        *,
+        payload_bytes: int | None = None,
+        uplink_bytes: int | list[int] | None = None,
     ) -> int:
-        """Total bytes crossing the network this round (up + down, all clients)."""
+        """Total bytes crossing the network this round (up + down, all clients).
+
+        Honors the same ``payload_bytes`` override as ``round_costs`` /
+        ``client_round_cost`` (both directions), so the reported byte count
+        can never disagree with the time/energy charge for the same round;
+        ``uplink_bytes`` still overrides only the client->server leg.
+        """
+        down = self.update_bytes if payload_bytes is None else payload_bytes
         ups = self._per_client(uplink_bytes, n_clients)
-        return sum(
-            (self.update_bytes if up is None else up) + self.update_bytes
-            for up in ups
-        )
+        return sum((down if up is None else up) + down for up in ups)
 
     def round_wall_time(self, costs: list[ClientCost]) -> float:
         """Synchronous FedAvg: the round ends when the slowest client reports."""
@@ -182,6 +190,28 @@ class CostModel:
             for c in costs
         )
         return sum(c.e_total_j for c in costs) + idle
+
+    @staticmethod
+    def fleet_uplink_bytes(
+        codec, n_params: int, n_clients: int
+    ) -> list[int] | None:
+        """Per-client uplink charge for a (possibly mixed) codec.
+
+        A plain codec ships the same wire size from every client; a
+        ``MixedCodec`` returns one size per client (its group's codec) —
+        this is the per-group wire accounting the paper's system-cost
+        tables need for a heterogeneous fleet.  None codec -> None (the
+        cost model's full-precision default applies).
+        """
+        if codec is None:
+            return None
+        wb = codec.wire_bytes(n_params)
+        if isinstance(wb, list):
+            assert len(wb) == n_clients, (
+                f"codec charges {len(wb)} clients, round has {n_clients}"
+            )
+            return wb
+        return [int(wb)] * n_clients
 
     # ---- the paper's tau mechanism (§5, Table 3) ----
     def tau_for_profile(self, reference: str, *, epochs: int, steps_per_epoch: int) -> float:

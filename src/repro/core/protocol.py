@@ -127,15 +127,23 @@ def compress_to_wire(codec, enc, n_params: int) -> CompressedParameters:
     )
 
 
+def wire_to_enc(cp: CompressedParameters) -> dict:
+    """Rebuild the decodable codec payload from the serialized wire object:
+    aux scalars + deserialized arrays through ``codec.from_wire``.  The ONE
+    place the CompressedParameters deserialization protocol lives — both
+    the per-client dense decode (``wire_to_pytree``) and the Strategy's
+    grouped kernel reduce consume it."""
+    payload = dict(cp.aux)
+    for key, buf, (dtype, shape) in zip(cp.fields, cp.tensors, cp.manifest):
+        payload[key] = _decode_array(buf, dtype, shape)
+    return cp.codec.from_wire(payload)
+
+
 def wire_to_pytree(cp: CompressedParameters, global_params: PyTree) -> PyTree:
     """Decode a compressed uplink against the round's global parameters."""
     from .compression import decompress_update
 
-    payload = dict(cp.aux)
-    for key, buf, (dtype, shape) in zip(cp.fields, cp.tensors, cp.manifest):
-        payload[key] = _decode_array(buf, dtype, shape)
-    enc = cp.codec.from_wire(payload)
-    return decompress_update(cp.codec, enc, global_params)
+    return decompress_update(cp.codec, wire_to_enc(cp), global_params)
 
 
 # ---------------- messages ----------------

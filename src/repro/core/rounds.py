@@ -43,6 +43,16 @@ Three mesh mappings (DESIGN.md §4), every one codec-aware:
   flat update fits on one host, NOT for the multi-B fsdp archs this mode
   exists for (sharded codec state is a ROADMAP open item).
 
+A heterogeneous fleet runs inside ONE jitted round via ``MixedCodec``: its
+static per-client assignment partitions the client axis into per-codec
+groups at trace time — the parallel path aggregates group-wise through
+``codec.aggregate_updates`` (each group on its own kernel path, partial
+weighted sums combined under one fleet denominator), the sequential path
+runs one scan per group (each scan body closes over its group's wire
+format) with the carried delta accumulator threading across scans.
+``client_state`` is then a per-group tuple.  The mesh shard_map path
+rejects ``MixedCodec`` at build time: one SPMD program, one wire format.
+
 The paper's tau-cutoff becomes a *per-client step budget* ``step_budgets``
 (int (C,)): clients keep stepping while ``i < budget_c`` and freeze their
 parameters afterwards — shape-static, mask-realized partial work.
@@ -59,7 +69,7 @@ import jax.numpy as jnp
 from repro.optim import Optimizer
 from repro.utils.pytree import safe_weight_sum, tree_where
 
-from .compression import NullCodec
+from .compression import MixedCodec, NullCodec
 from .strategy.base import Strategy
 
 PyTree = Any
@@ -177,11 +187,19 @@ def _shard_map(f, mesh, in_specs, out_specs, axis_names):
 
 
 def _state_metrics(new_client_state) -> dict:
-    """Residual-norm telemetry when the codec carries per-client state."""
-    if not jax.tree.leaves(new_client_state):
+    """Residual-norm telemetry when the codec carries per-client state.
+
+    Handles the per-group tuple state of ``MixedCodec`` too: every leaf is a
+    (C_g, n_params) residual block; the mean is over ALL residual rows of
+    the fleet (groups without state — Null — simply contribute no rows)."""
+    rows = [
+        jnp.linalg.norm(leaf.reshape(leaf.shape[0], -1), axis=-1)
+        for leaf in jax.tree.leaves(new_client_state)
+        if leaf.ndim >= 2 and leaf.shape[0] > 0
+    ]
+    if not rows:
         return {}
-    res = jax.tree.leaves(new_client_state)[0]
-    return {"residual_norm_mean": jnp.mean(jnp.linalg.norm(res, axis=-1))}
+    return {"residual_norm_mean": jnp.mean(jnp.concatenate(rows))}
 
 
 def make_round_step(
@@ -210,6 +228,12 @@ def make_round_step(
     codec = spec.codec if spec.codec is not None else NullCodec()
 
     if spec.execution_mode == "parallel" and mesh is not None:
+        if isinstance(codec, MixedCodec):
+            raise NotImplementedError(
+                "MixedCodec is not supported on the mesh shard_map path: an "
+                "SPMD program runs ONE wire format per device; use the "
+                "vmap-parallel or sequential execution mode for mixed fleets"
+            )
         from jax.sharding import PartitionSpec as P
 
         axes = client_axes
@@ -270,8 +294,11 @@ def make_round_step(
             new_global, new_state = strategy.server_update(
                 avg, global_params, server_state, rnd
             )
+            wf = weights.astype(jnp.float32)
             metrics = {
-                "client_loss_mean": jnp.mean(losses),
+                # examples-weighted, like every other execution mode: the
+                # same round must report the same metric everywhere
+                "client_loss_mean": jnp.sum(losses * wf) / safe_weight_sum(wf),
                 "client_loss_max": jnp.max(losses),
                 "steps_total": jnp.sum(steps),
                 **_state_metrics(new_client_state),
@@ -298,8 +325,11 @@ def make_round_step(
             new_global, new_state = strategy.server_update(
                 avg_params, global_params, server_state, rnd
             )
+            wf = weights.astype(jnp.float32)
             metrics = {
-                "client_loss_mean": jnp.mean(losses),
+                # examples-weighted (matches the sequential scan's running
+                # weighted mean): one metric definition across all modes
+                "client_loss_mean": jnp.sum(losses * wf) / safe_weight_sum(wf),
                 "client_loss_max": jnp.max(losses),
                 "steps_total": jnp.sum(steps),
                 **_state_metrics(new_client_state),
@@ -323,38 +353,62 @@ def make_round_step(
         wf = weights.astype(jnp.float32)
         wsum = safe_weight_sum(wf)
 
-        def per_client(carry, xs):
-            delta_acc, loss_acc, loss_max, steps_acc = carry
-            client_batches, w, budget, state_row = xs
-            new_params, loss, steps = client_update(
-                global_params, client_batches, budget
-            )
-            delta = jax.tree.map(jnp.subtract, new_params, global_params)
-            # codec round-trip: only what survives the wire is accumulated
-            dec_delta, new_row = codec.transmit_tree(delta, state_row)
-            scale = (w / wsum).astype(jnp.bfloat16)
-            delta_acc = _pin(jax.tree.map(
-                lambda acc, d: acc + scale * d.astype(jnp.bfloat16),
-                delta_acc, dec_delta,
-            ))
-            carry = (
-                delta_acc,
-                loss_acc + loss * w / wsum,
-                jnp.maximum(loss_max, loss),
-                steps_acc + steps,
-            )
-            return carry, new_row
+        def make_per_client(codec_g):
+            def per_client(carry, xs):
+                delta_acc, loss_acc, loss_max, steps_acc = carry
+                client_batches, w, budget, state_row = xs
+                new_params, loss, steps = client_update(
+                    global_params, client_batches, budget
+                )
+                delta = jax.tree.map(jnp.subtract, new_params, global_params)
+                # codec round-trip: only what survives the wire is accumulated
+                dec_delta, new_row = codec_g.transmit_tree(delta, state_row)
+                scale = (w / wsum).astype(jnp.bfloat16)
+                delta_acc = _pin(jax.tree.map(
+                    lambda acc, d: acc + scale * d.astype(jnp.bfloat16),
+                    delta_acc, dec_delta,
+                ))
+                carry = (
+                    delta_acc,
+                    loss_acc + loss * w / wsum,
+                    jnp.maximum(loss_max, loss),
+                    steps_acc + steps,
+                )
+                return carry, new_row
+
+            return per_client
 
         # bf16 delta accumulator: halves the largest param-state buffer; the
         # single-round accumulation error is far below local-SGD noise
         zero_delta = _pin(jax.tree.map(
             lambda g: jnp.zeros(g.shape, jnp.bfloat16), global_params
         ))
-        (delta, loss_mean, loss_max, steps_total), new_client_state = jax.lax.scan(
-            per_client,
-            (zero_delta, jnp.zeros(()), jnp.full((), -jnp.inf), jnp.zeros((), jnp.int32)),
-            (batches, wf, step_budgets, client_state),
+        carry = (
+            zero_delta, jnp.zeros(()), jnp.full((), -jnp.inf),
+            jnp.zeros((), jnp.int32),
         )
+        if isinstance(codec, MixedCodec):
+            # one scan per codec group: the assignment is static, so each
+            # group's rows are gathered at trace time and its wire format is
+            # a trace-time constant inside its scan body; the carried delta
+            # accumulator and loss/steps stats thread across the group
+            # scans, all normalized by the ONE fleet-wide weight sum
+            new_states = list(client_state)
+            for g, codec_g, idx in codec.groups():
+                xs_g = (
+                    jax.tree.map(lambda x: x[idx], batches),
+                    wf[idx], step_budgets[idx], client_state[g],
+                )
+                carry, new_states[g] = jax.lax.scan(
+                    make_per_client(codec_g), carry, xs_g
+                )
+            new_client_state = tuple(new_states)
+        else:
+            carry, new_client_state = jax.lax.scan(
+                make_per_client(codec), carry,
+                (batches, wf, step_budgets, client_state),
+            )
+        delta, loss_mean, loss_max, steps_total = carry
         # the averaged delta goes straight through server_update (FedAvg:
         # identity; FedOpt: server optimizer) — no stacked fp32 detour.
         avg_params = _pin(jax.tree.map(

@@ -88,6 +88,9 @@ class Server:
         client_props = {cid: self.clients[cid].properties() for cid in client_ids}
         for c in self.clients:  # fresh trajectory: no residual carry-over
             c.reset_state()
+        # fresh server trajectory too: FedOpt moments must not leak from a
+        # previous run, but DO accumulate across this run's rounds
+        self.strategy.reset_server_state()
 
         for rnd in range(1, num_rounds + 1):
             fit_ins = self.strategy.configure_fit(
@@ -166,13 +169,16 @@ class Server:
         if not any_wire and self.codec is None:
             return None
         n = tree_size(global_params)
+        # one per-client charge table for the whole round (MixedCodec builds
+        # a per-client list; the helper also validates it against the fleet)
+        fallback = CostModel.fleet_uplink_bytes(self.codec, n, len(self.clients))
         out = []
-        for _, res in results:
+        for cid, res in results:
             p = res.parameters
             if isinstance(p, (Parameters, CompressedParameters)):
                 out.append(p.num_bytes)
-            elif self.codec is not None:
-                out.append(self.codec.wire_bytes(n))
+            elif fallback is not None:
+                out.append(fallback[cid])
             else:
                 out.append(tree_bytes(global_params))
         return out

@@ -24,9 +24,11 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.utils.pytree import (
-    tree_flatten_to_vector, tree_scale, tree_sub, tree_unflatten_from_vector,
+    safe_weight_sum, tree_flatten_to_vector, tree_scale, tree_sub,
+    tree_unflatten_from_vector,
 )
 
 from ..protocol import (
@@ -43,6 +45,26 @@ class Strategy:
     fraction_fit: float = 1.0
     min_fit_clients: int = 1
     codec_policy: Any = None    # BandwidthCodecPolicy | None: per-device codecs
+    # python-path server state (e.g. FedOpt optimizer moments), carried
+    # across aggregate_fit rounds exactly as the jitted engine threads
+    # server_state through round_step; reset at the start of Server.run
+    _server_state: Any = field(default=None, repr=False)
+
+    # ---------------- python-path server state ----------------
+    def reset_server_state(self) -> None:
+        """Drop the carried server state (Server.run calls this per run)."""
+        self._server_state = None
+
+    def _server_state_for(self, global_params: PyTree) -> PyTree:
+        """The carried python-path server state, lazily initialized.
+
+        Regression guard: ``aggregate_fit`` used to pass a FRESH
+        ``init_state`` every round and discard the returned state, so
+        FedAdam/FedYogi/FedAvgM never accumulated optimizer moments under
+        ``Server.run`` — diverging from the jitted engine."""
+        if self._server_state is None:
+            self._server_state = self.init_state(global_params)
+        return self._server_state
 
     # ---------------- python-side orchestration ----------------
     def num_fit_clients(self, available: int) -> int:
@@ -102,11 +124,15 @@ class Strategy:
     ) -> PyTree:
         """Default: examples-weighted average of returned parameters.
 
-        A homogeneous-TopK fleet takes the sparse path: the serialized
-        (idx, val) wire payloads feed the scatter-accumulate kernel directly
-        — O(C·k), no per-client dense decode, no stacked (C, ...) params.
-        Mixed-codec fleets (and raw-pytree transports) densify per client as
-        before.
+        Compressed-wire fleets — homogeneous OR mixed — take the grouped
+        kernel-path reduce (``_aggregate_fit_wire``): clients partition by
+        codec and each group's serialized payloads feed that codec's own
+        reduce kernel (TopK → scatter-accumulate, O(C·k), never densified;
+        Int8 → fused dequant+reduce; Null → fedavg reduce), the partial
+        weighted sums combining under one fleet denominator.  Only raw-
+        pytree transports, foreign codecs, and non-linear aggregators
+        densify per client.  Server state (FedOpt moments) is carried
+        across rounds on both paths.
         """
         weights = jnp.asarray(
             [float(r.num_examples) for _, r in results], jnp.float32
@@ -115,20 +141,25 @@ class Strategy:
             # every sampled client reported zero examples: fall back to an
             # unweighted mean instead of poisoning the global with NaNs
             weights = jnp.ones_like(weights)
-        sparse = self._aggregate_fit_topk(rnd, results, weights, global_params)
-        if sparse is not None:
-            return sparse
-        trees = [self.fitres_parameters(r, global_params) for _, r in results]
-        stacked = jax.tree.map(
-            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees
+        server_state = self._server_state_for(global_params)
+        grouped = self._aggregate_fit_wire(
+            rnd, results, weights, global_params, server_state
         )
-        new_global, _ = self.aggregate(
-            stacked, weights, global_params, self.init_state(global_params), rnd
-        )
+        if grouped is not None:
+            new_global, new_state = grouped
+        else:
+            trees = [self.fitres_parameters(r, global_params) for _, r in results]
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees
+            )
+            new_global, new_state = self.aggregate(
+                stacked, weights, global_params, server_state, rnd
+            )
+        self._server_state = new_state
         return new_global
 
-    def _sparse_fit_compatible(self) -> bool:
-        """The sparse fast path computes weighted-mean + ``server_update``;
+    def _grouped_fit_compatible(self) -> bool:
+        """The grouped wire reduce computes weighted-mean + ``server_update``;
         that composition is only known to equal ``aggregate`` for the
         in-tree linear aggregators.  A subclass overriding ``aggregate``
         (robust aggregation: median, trimmed mean, ...) or pairing a stock
@@ -147,70 +178,110 @@ class Strategy:
             return cls.server_update is FedOpt.server_update
         return False
 
-    def _aggregate_fit_topk(
-        self, rnd: int, results, weights: jnp.ndarray, global_params: PyTree
-    ) -> PyTree | None:
-        """Sparse aggregation of an all-TopK round, or None to densify.
+    def _aggregate_fit_wire(
+        self, rnd: int, results, weights: jnp.ndarray, global_params: PyTree,
+        server_state: PyTree,
+    ) -> tuple[PyTree, PyTree] | None:
+        """Grouped kernel-path aggregation of a compressed-wire fleet, or
+        None to densify.
 
-        Deserializes every client's (idx, val) payload, pads rows to the
-        fleet max k (index 0 / value 0 — a zero-value scatter contributes
-        nothing), scatter-reduces, and hands the reduced average to
-        ``server_update`` — the same consumer the jitted engine uses, and
+        Partitions clients by codec (equal-config codecs share a group) and
+        reduces each group's payloads on that codec's own kernel path —
+        the same grouped reduce ``MixedCodec`` runs inside the jitted
+        engine, so a Pixel→TopK / Jetson→Int8 / TPU→Null fleet never
+        materializes per-client dense params here either.  Each group
+        yields its partial weighted delta sum; one fleet-wide
+        ``safe_weight_sum`` denominator turns the combined sum into the
+        mean that feeds ``server_update`` (the jitted engine's consumer) —
         identical to ``aggregate`` over stacked decoded params for every
-        strategy ``_sparse_fit_compatible`` admits (FedAvg/FedProx/FedTau:
-        weighted mean; FedOpt: pseudo-gradient of the mean).
+        strategy ``_grouped_fit_compatible`` admits.  A homogeneous-TopK
+        pseudo-gradient stays EXACTLY zero at untransmitted coordinates, so
+        FedOpt leaves them untouched (no fp-noise adam drift).
         """
-        from repro.kernels import ops
+        from ..compression import Int8Codec, NullCodec, TopKCodec
+        from ..protocol import wire_to_enc
 
-        from ..compression import TopKCodec
-
-        if not results or not self._sparse_fit_compatible():
+        if not results or not self._grouped_fit_compatible():
             return None
-        payloads = []
+        cps, encs = [], []
         for _, res in results:
             cp = res.parameters
-            # exact type, not isinstance: a TopKCodec subclass may redefine
-            # the wire format (from_wire/decode), which only the dense path
-            # interprets correctly
-            if not isinstance(cp, CompressedParameters) or type(cp.codec) is not TopKCodec:
+            # exact types, not isinstance: a codec subclass may redefine
+            # the wire format (from_wire/decode), which only the per-client
+            # dense decode interprets correctly
+            if not isinstance(cp, CompressedParameters) or type(cp.codec) not in (
+                NullCodec, Int8Codec, TopKCodec
+            ):
                 return None
-            payloads.append(cp)
-        n_params = payloads[0].n_params
-        if any(cp.n_params != n_params for cp in payloads):
+            enc = wire_to_enc(cp)
+            required = (
+                {"idx", "val"} if type(cp.codec) is TopKCodec
+                else {"q", "scale"} if type(cp.codec) is Int8Codec
+                else {"delta"}
+            )
+            if not required <= set(enc):
+                return None
+            cps.append(cp)
+            encs.append(enc)
+        n_params = cps[0].n_params
+        if any(cp.n_params != n_params for cp in cps):
             return None
 
-        from ..protocol import _decode_array
+        groups: dict[Any, list[int]] = {}
+        for i, cp in enumerate(cps):
+            groups.setdefault(cp.codec, []).append(i)
 
-        rows = []
-        for cp in payloads:
-            # rebuild the decodable payload exactly as wire_to_pytree does:
-            # aux scalars + deserialized arrays through codec.from_wire
-            payload = dict(cp.aux)
-            for key, buf, (dtype, shape) in zip(cp.fields, cp.tensors, cp.manifest):
-                payload[key] = _decode_array(buf, dtype, shape)
-            enc = cp.codec.from_wire(payload)
-            if not {"idx", "val"} <= set(enc):
-                return None
-            rows.append((jnp.asarray(enc["idx"]).reshape(-1),
-                         jnp.asarray(enc["val"]).reshape(-1)))
-        k_max = max(int(i.shape[0]) for i, _ in rows)
-        if k_max == 0:
-            return global_params
-        idx = jnp.stack([
-            jnp.pad(i.astype(jnp.int32), (0, k_max - i.shape[0])) for i, _ in rows
-        ])
-        val = jnp.stack([
-            jnp.pad(v.astype(jnp.float32), (0, k_max - v.shape[0])) for _, v in rows
-        ])
-        avg_delta = ops.topk_scatter_reduce(idx, val, weights, n_params)
+        wf = weights.astype(jnp.float32)
+        total = jnp.zeros((n_params,), jnp.float32)
+        for codec, rows in groups.items():
+            total = total + self._group_wire_sum(
+                codec, [encs[i] for i in rows], wf[np.asarray(rows)], n_params
+            )
+        avg_delta = total / safe_weight_sum(wf)
         flat_global = tree_flatten_to_vector(global_params)
         avg_params = tree_unflatten_from_vector(
             flat_global + avg_delta, global_params
         )
-        new_global, _ = self.server_update(
-            avg_params, global_params, self.init_state(global_params), rnd
-        )
-        return new_global
+        return self.server_update(avg_params, global_params, server_state, rnd)
+
+    @staticmethod
+    def _group_wire_sum(codec, encs: list[dict], w_g, n_params: int):
+        """One codec group's partial weighted delta sum (N,), on the group's
+        own kernel path (``normalize=False``: the caller owns the ONE
+        fleet-wide denominator)."""
+        from repro.kernels import ops
+
+        from ..compression import Int8Codec, TopKCodec
+
+        if type(codec) is TopKCodec:
+            rows = [(jnp.asarray(e["idx"]).reshape(-1),
+                     jnp.asarray(e["val"]).reshape(-1)) for e in encs]
+            # pad rows to the group max k: index 0 / value 0 — a zero-value
+            # scatter contributes nothing
+            k_max = max(int(i.shape[0]) for i, _ in rows)
+            if k_max == 0:
+                return jnp.zeros((n_params,), jnp.float32)
+            idx = jnp.stack([
+                jnp.pad(i.astype(jnp.int32), (0, k_max - i.shape[0]))
+                for i, _ in rows
+            ])
+            val = jnp.stack([
+                jnp.pad(v.astype(jnp.float32), (0, k_max - v.shape[0]))
+                for _, v in rows
+            ])
+            return ops.topk_scatter_reduce(
+                idx, val, w_g, n_params, normalize=False
+            )
+        if type(codec) is Int8Codec:
+            q = jnp.stack([e["q"] for e in encs])
+            scale = jnp.stack([e["scale"] for e in encs])
+            return ops.dequant_reduce(
+                q, scale, w_g, block=codec.block, normalize=False
+            )[:n_params]
+        deltas = jnp.stack([
+            jnp.asarray(e["delta"], jnp.float32) for e in encs
+        ])
+        return ops.fedavg_reduce(deltas, w_g, normalize=False)
 
     # ---------------- jit-able core ----------------
     def init_state(self, global_params: PyTree) -> PyTree:

@@ -86,30 +86,45 @@ selective_scan_step = ref.selective_scan_step  # trivially small; no kernel
 
 
 # ---------------- FL aggregation ----------------
-def fedavg_reduce(updates, weights, *, interpret=False):
+def _denormalize(out, weights):
+    """Undo the reduce kernels' internal safe_weight_sum normalization,
+    turning the weighted mean back into the weighted SUM — the group-partial
+    form the mixed-codec engine combines under ONE fleet-wide denominator.
+    Exact for the all-zero-weight case (0 * 1 == 0 on both forms)."""
+    from repro.utils.pytree import safe_weight_sum
+
+    return out * safe_weight_sum(weights.astype(jnp.float32)).astype(out.dtype)
+
+
+def fedavg_reduce(updates, weights, *, interpret=False, normalize=True):
     if _use_pallas() or interpret:
         from .fedavg_reduce import fedavg_reduce as fr
 
         # the kernel pads N up to a lane-aligned tile itself: no shape gate
-        return fr(
+        out = fr(
             updates, weights,
             interpret=interpret or jax.default_backend() != "tpu",
         )
-    return ref.fedavg_reduce(updates, weights)
+    else:
+        out = ref.fedavg_reduce(updates, weights)
+    return out if normalize else _denormalize(out, weights)
 
 
-def dequant_reduce(q, scales, weights, block: int = 256, *, interpret=False):
+def dequant_reduce(q, scales, weights, block: int = 256, *, interpret=False,
+                   normalize=True):
     """Fused server-side decode: int8 payload (C,N) + scales -> (N,) mean."""
     if _use_pallas() or interpret:
         from .dequant_reduce import dequant_reduce as dr
 
         # the encoder pads to a block multiple; the kernel tile-pads beyond
         if q.shape[-1] % block == 0:
-            return dr(
+            out = dr(
                 q, scales, weights, block=block,
                 interpret=interpret or jax.default_backend() != "tpu",
             )
-    return ref.dequant_reduce(q, scales, weights, block=block)
+            return out if normalize else _denormalize(out, weights)
+    out = ref.dequant_reduce(q, scales, weights, block=block)
+    return out if normalize else _denormalize(out, weights)
 
 
 # count of sparse-path dispatches (trace-time): benchmarks/compression_bench
@@ -122,7 +137,8 @@ def topk_sparse_calls() -> int:
     return _TOPK_SPARSE_CALLS
 
 
-def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret=False):
+def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret=False,
+                        normalize=True):
     """Sparse TopK aggregation: (C,k) idx/val + (C,) weights -> (N,) mean.
 
     O(C·k) on every branch — the Pallas kernel keeps the (N,) accumulator
@@ -135,11 +151,13 @@ def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret=False):
         from .scatter_reduce import VMEM_ELEMS, topk_scatter_reduce as sr
 
         if n_params <= VMEM_ELEMS:
-            return sr(
+            out = sr(
                 idx, val, weights, n_params,
                 interpret=interpret or jax.default_backend() != "tpu",
             )
-    return ref.topk_scatter_reduce(idx, val, weights, n_params)
+            return out if normalize else _denormalize(out, weights)
+    out = ref.topk_scatter_reduce(idx, val, weights, n_params)
+    return out if normalize else _denormalize(out, weights)
 
 
 # ---------------- int8 codec ----------------

@@ -161,6 +161,29 @@ def test_int8_mesh_path_converges_like_uncompressed():
     assert res_norms and max(res_norms) < 1.0
 
 
+def test_client_loss_mean_weighted_on_every_mode():
+    """Same round, same metric: client_loss_mean is the examples-weighted
+    mean on the vmap, mesh shard_map, and sequential paths alike (the vmap
+    and mesh paths used to report an unweighted jnp.mean)."""
+    m, params, train, _ = _setup()
+    mesh, axes = _client_mesh()
+    w = jnp.asarray([1.0, 4.0, 0.25, 2.0])  # non-uniform: unweighted differs
+    bud = jnp.full((C,), STEPS, jnp.int32)
+    means = {}
+    for label, kw in (
+        ("parallel", {}),
+        ("mesh", {"mesh": mesh, "client_axes": axes}),
+        ("sequential", {}),
+    ):
+        mode = "sequential" if label == "sequential" else "parallel"
+        spec = RoundSpec(max_steps=STEPS, execution_mode=mode, codec=NullCodec())
+        rs = jax.jit(make_round_step(m.loss_fn, sgd(0.1), FedAvg(), spec, **kw))
+        _, _, _, met = rs(params, (), (), train, w, bud, 0)
+        means[label] = float(met["client_loss_mean"])
+    assert means["mesh"] == pytest.approx(means["parallel"], rel=1e-4)
+    assert means["sequential"] == pytest.approx(means["parallel"], rel=1e-4)
+
+
 # ---------------- sequential scan path ----------------
 def test_int8_sequential_path_converges_like_uncompressed():
     """ISSUE acceptance: codec through the sequential scan (per-client state

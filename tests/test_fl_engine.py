@@ -117,6 +117,12 @@ def test_round_step_sequential_matches_parallel_fedavg():
         float(metrics["sequential"]["client_loss_max"])
         >= float(metrics["sequential"]["client_loss_mean"]) - 1e-6
     )
+    # same round, same metric: client_loss_mean is the examples-weighted
+    # mean on EVERY execution mode (weights above are non-uniform, so an
+    # unweighted mean on either path would break this)
+    assert float(metrics["sequential"]["client_loss_mean"]) == pytest.approx(
+        float(metrics["parallel"]["client_loss_mean"]), rel=1e-4
+    )
 
 
 def test_round_step_tau_budget_masks_steps():
@@ -330,6 +336,28 @@ def test_cost_model_charges_compressed_uplink():
     assert cm.round_comm_bytes(3, uplink_bytes=1_000_000) == 3 * 5_000_000
 
 
+def test_round_comm_bytes_honors_payload_override():
+    """Regression: round_comm_bytes charged the downlink at update_bytes
+    even when round_costs was given a payload_bytes override, so the
+    reported byte count disagreed with the time/energy charge."""
+    cm = CostModel(profiles=[PROFILES["pixel-4"]], update_bytes=4_000_000)
+    # payload override, both directions (legacy callers)
+    assert cm.round_comm_bytes(3, payload_bytes=1_000_000) == 3 * 2_000_000
+    # ...and it must agree with what client_round_cost charges time for
+    cost = cm.client_round_cost(0, 10, payload_bytes=1_000_000)
+    p = PROFILES["pixel-4"]
+    expected_t = 1_000_000 * 8 / (p.uplink_mbps * 1e6) + 1_000_000 * 8 / (
+        p.downlink_mbps * 1e6
+    )
+    assert cost.t_comm_s == pytest.approx(expected_t)
+    # uplink override still narrows only the client->server leg
+    assert cm.round_comm_bytes(
+        2, payload_bytes=1_000_000, uplink_bytes=500
+    ) == 2 * (500 + 1_000_000)
+    # no override: unchanged behavior
+    assert cm.round_comm_bytes(2) == 2 * 8_000_000
+
+
 def test_int8_codec_roundtrip_and_wire_size():
     codec = Int8Codec()
     rng = np.random.default_rng(0)
@@ -383,8 +411,8 @@ def _topk_fit_results(codec, global_params, n_clients, seed=0):
 
 @pytest.mark.parametrize("strategy_cls", [FedAvg, FedProx])
 def test_aggregate_fit_topk_sparse_path_matches_dense(strategy_cls):
-    """A homogeneous-TopK fleet takes the O(C·k) sparse path; for the linear
-    aggregators it must agree with the per-client densify path to 1e-5."""
+    """A homogeneous-TopK fleet takes the O(C·k) grouped wire path; for the
+    linear aggregators it must agree with the per-client densify path."""
     rng = np.random.default_rng(5)
     gp = {"a": jnp.asarray(rng.normal(size=(30, 10)), jnp.float32),
           "b": jnp.asarray(rng.normal(size=(17,)), jnp.float32)}
@@ -392,8 +420,10 @@ def test_aggregate_fit_topk_sparse_path_matches_dense(strategy_cls):
     strat = strategy_cls()
     weights = jnp.asarray([float(r.num_examples) for _, r in results])
 
-    sparse = strat._aggregate_fit_topk(0, results, weights, gp)
-    assert sparse is not None, "all-TopK fleet must select the sparse path"
+    grouped = strat._aggregate_fit_wire(0, results, weights, gp,
+                                        strat.init_state(gp))
+    assert grouped is not None, "all-TopK fleet must select the wire path"
+    sparse, _ = grouped
     trees = [strat.fitres_parameters(r, gp) for _, r in results]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
     dense, _ = strat.aggregate(stacked, weights, gp, strat.init_state(gp), 0)
@@ -418,8 +448,10 @@ def test_aggregate_fit_topk_sparse_path_fedopt():
     results = _topk_fit_results(TopKCodec(frac=0.1), gp, n_clients=4)
     strat = FedAdam()
     weights = jnp.asarray([float(r.num_examples) for _, r in results])
-    sparse = strat._aggregate_fit_topk(0, results, weights, gp)
-    assert sparse is not None
+    grouped = strat._aggregate_fit_wire(0, results, weights, gp,
+                                        strat.init_state(gp))
+    assert grouped is not None
+    sparse, _ = grouped
 
     touched = np.zeros(300, bool)
     for _, res in results:
@@ -455,22 +487,23 @@ def test_aggregate_fit_custom_aggregate_override_falls_back():
     results = _topk_fit_results(TopKCodec(frac=0.1), gp, n_clients=3)
     strat = MedianStrategy()
     weights = jnp.asarray([float(r.num_examples) for _, r in results])
-    assert not strat._sparse_fit_compatible()
-    assert strat._aggregate_fit_topk(0, results, weights, gp) is None
+    assert not strat._grouped_fit_compatible()
+    assert strat._aggregate_fit_wire(0, results, weights, gp, ()) is None
     # the full call routes through the override: result == leafwise median
     out = strat.aggregate_fit(0, results, gp)
     trees = [strat.fitres_parameters(r, gp) for _, r in results]
     exp = jnp.median(jnp.stack([t["w"] for t in trees]), axis=0)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(exp), atol=1e-6)
     # while the stock strategies stay eligible
-    assert FedAvg()._sparse_fit_compatible()
-    assert FedProx()._sparse_fit_compatible()
-    assert FedAdam()._sparse_fit_compatible()
+    assert FedAvg()._grouped_fit_compatible()
+    assert FedProx()._grouped_fit_compatible()
+    assert FedAdam()._grouped_fit_compatible()
 
 
-def test_aggregate_fit_mixed_codec_fleet_falls_back_to_densify():
-    """One Int8 client in the fleet -> the sparse fast path declines and the
-    stacked densify path produces the answer (documented densify case)."""
+def test_aggregate_fit_mixed_codec_fleet_takes_grouped_path():
+    """A mixed TopK+Int8 fleet no longer densifies per client: the grouped
+    wire reduce aggregates each codec group on its own kernel path and
+    matches the stacked densify reference (the PR 3 fallback is deleted)."""
     rng = np.random.default_rng(6)
     gp = {"w": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
     results = _topk_fit_results(TopKCodec(frac=0.1), gp, n_clients=3)
@@ -482,9 +515,39 @@ def test_aggregate_fit_mixed_codec_fleet_falls_back_to_densify():
                               num_examples=10)))
     strat = FedAvg()
     weights = jnp.asarray([float(r.num_examples) for _, r in results])
-    assert strat._aggregate_fit_topk(0, results, weights, gp) is None
+    grouped = strat._aggregate_fit_wire(0, results, weights, gp,
+                                        strat.init_state(gp))
+    assert grouped is not None, "mixed stock-codec fleet must take the wire path"
+    out, _ = grouped
+    # reference: stack the per-client dense decodes, weighted mean
+    trees = [strat.fitres_parameters(r, gp) for _, r in results]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    exp, _ = strat.aggregate(stacked, weights, gp, strat.init_state(gp), 0)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(exp["w"]),
+                               atol=1e-5, rtol=1e-5)
+    # ...and the TopK group is never densified along the way
+    from repro.core.compression import ban_topk_densify
+
+    strat.reset_server_state()
+    with ban_topk_densify():
+        full = strat.aggregate_fit(0, results, gp)
+    np.testing.assert_array_equal(np.asarray(full["w"]), np.asarray(out["w"]))
+
+
+def test_aggregate_fit_foreign_codec_falls_back_to_densify():
+    """A codec subclass may redefine the wire format: exact-type checks must
+    route it to the per-client dense decode, not the grouped kernel path."""
+    class WeirdTopK(TopKCodec):
+        pass
+
+    rng = np.random.default_rng(9)
+    gp = {"w": jnp.asarray(rng.normal(size=(120,)), jnp.float32)}
+    results = _topk_fit_results(WeirdTopK(frac=0.1), gp, n_clients=2)
+    strat = FedAvg()
+    weights = jnp.asarray([float(r.num_examples) for _, r in results])
+    assert strat._aggregate_fit_wire(0, results, weights, gp, ()) is None
     out = strat.aggregate_fit(0, results, gp)  # densify path still works
-    assert out["w"].shape == (300,)
+    assert out["w"].shape == (120,)
 
 
 # ---------------- data ----------------

@@ -326,3 +326,50 @@ def test_quantize_error_bound(seed, scale):
     err = np.abs(np.asarray(x - xd)).reshape(-1, 256)
     bound = np.asarray(s)[:, None] * 0.5 + 1e-9
     assert (err <= bound + 1e-6).all()
+
+
+# ---------------- ops-level group partial sums (normalize=False) ----------------
+@pytest.mark.parametrize("interpret", [False, True])
+def test_ops_reduces_normalize_false_yield_weighted_sums(interpret):
+    """normalize=False turns each FL reduce into the weighted SUM — the
+    group-partial form the mixed-codec engine combines under one fleet
+    denominator — on both the kernel and reference dispatch paths."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(11)
+    c, n = 4, 1024
+    w = jnp.asarray(rng.random(c) + 0.1, jnp.float32)
+    wsum = float(jnp.sum(w))
+
+    u = jnp.asarray(rng.normal(size=(c, n)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.fedavg_reduce(u, w, interpret=interpret, normalize=False)),
+        np.asarray(ops.fedavg_reduce(u, w, interpret=interpret)) * wsum,
+        atol=1e-4, rtol=1e-5,
+    )
+
+    q, s = ref.quantize_int8(u.reshape(-1))
+    q = q.reshape(c, n)
+    s = s.reshape(c, n // 256)
+    np.testing.assert_allclose(
+        np.asarray(ops.dequant_reduce(q, s, w, interpret=interpret, normalize=False)),
+        np.asarray(ops.dequant_reduce(q, s, w, interpret=interpret)) * wsum,
+        atol=1e-4, rtol=1e-5,
+    )
+
+    idx = jnp.asarray(rng.integers(0, n, (c, 16)), jnp.int32)
+    val = jnp.asarray(rng.normal(size=(c, 16)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.topk_scatter_reduce(idx, val, w, n, interpret=interpret,
+                                           normalize=False)),
+        np.asarray(ops.topk_scatter_reduce(idx, val, w, n, interpret=interpret)) * wsum,
+        atol=1e-5, rtol=1e-5,
+    )
+    # all-zero weights: the weighted sum is exactly zero, never NaN
+    z = jnp.zeros(c)
+    for out in (
+        ops.fedavg_reduce(u, z, interpret=interpret, normalize=False),
+        ops.topk_scatter_reduce(idx, val, z, n, interpret=interpret,
+                                normalize=False),
+    ):
+        np.testing.assert_array_equal(np.asarray(out), 0.0)

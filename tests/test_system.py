@@ -7,12 +7,14 @@ Validates the paper's qualitative claims at CPU scale:
 - the tau cutoff reduces slow-client work at bounded accuracy cost (Table 3).
 """
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (
-    BandwidthCodecPolicy, Client, CompressedParameters, FedAvg, FedTau,
-    FitRes, Int8Codec, JaxClient, NullCodec, Server, TopKCodec, PROFILES,
+    BandwidthCodecPolicy, Client, CompressedParameters, FedAdam, FedAvg,
+    FedTau, FitRes, Int8Codec, JaxClient, NullCodec, Server, TopKCodec,
+    PROFILES,
 )
 from repro.core.server import make_cost_model_for
 from repro.data.federated import dirichlet_partition
@@ -139,6 +141,132 @@ def test_heterogeneous_fleet_per_device_codecs():
     assert clients[0]._residual is not None  # set during the run above
     server.run(params, num_rounds=0)
     assert clients[0]._residual is None
+
+
+class _FixedDeltaClient(Client):
+    """Deterministic client: returns global + its fixed delta, no training —
+    lets a python Server round be replayed exactly against the jitted
+    engine's aggregation semantics."""
+
+    def __init__(self, delta, num_examples=10):
+        self.delta = delta
+        self._n = num_examples
+
+    def fit(self, ins):
+        newp = jax.tree.map(lambda g, d: g + d, ins.parameters, self.delta)
+        return FitRes(parameters=newp, num_examples=self._n,
+                      metrics={"loss": 1.0, "steps_done": 1})
+
+    def evaluate(self, ins):
+        from repro.core import EvaluateRes
+
+        return EvaluateRes(loss=1.0, num_examples=1, metrics={"acc": 0.0})
+
+
+def test_fedopt_server_state_accumulates_across_rounds():
+    """Regression (FedOpt server-state amnesia): aggregate_fit used to pass
+    a fresh init_state every round and discard the returned state, so
+    FedAdam never accumulated moments under Server.run.  Now: Adam moments
+    are nonzero after round 2, the python path matches the jitted engine's
+    state threading on an identical round sequence, and the state resets
+    per run."""
+    from repro.core.strategy.base import weighted_mean
+
+    rng = np.random.default_rng(0)
+    gp = {"w": jnp.asarray(rng.normal(size=(40,)), jnp.float32)}
+    deltas = [
+        {"w": 0.05 * jnp.asarray(rng.normal(size=(40,)), jnp.float32)}
+        for _ in range(3)
+    ]
+    clients = [_FixedDeltaClient(d) for d in deltas]
+    strat = FedAdam(server_lr=0.1)
+    server = Server(strategy=strat, clients=clients)
+    server.logger.quiet = True
+    final, _ = server.run(gp, num_rounds=3)
+
+    # Adam moments accumulated (nonzero after round >= 2)
+    moments = jax.tree.leaves(strat._server_state)
+    assert moments and any(float(jnp.abs(m).sum()) > 0 for m in moments)
+
+    # parity with the jitted engine's threading: round_step hands
+    # weighted_mean(clients) to server_update and carries the state
+    ref = FedAdam(server_lr=0.1)
+    p, state = gp, ref.init_state(gp)
+    for rnd in range(1, 4):
+        stacked = jax.tree.map(
+            lambda g, *ds: jnp.stack([g + d for d in ds]), p,
+            *[d for d in deltas],
+        )
+        avg = weighted_mean(stacked, jnp.full(3, 10.0))
+        p, state = ref.server_update(avg, p, state, rnd)
+    np.testing.assert_allclose(
+        np.asarray(final["w"]), np.asarray(p["w"]), atol=1e-5, rtol=1e-5
+    )
+    # amnesia sanity: re-initializing the state every round lands elsewhere
+    p_amnesia = gp
+    for rnd in range(1, 4):
+        stacked = jax.tree.map(
+            lambda g, *ds: jnp.stack([g + d for d in ds]), p_amnesia,
+            *[d for d in deltas],
+        )
+        avg = weighted_mean(stacked, jnp.full(3, 10.0))
+        p_amnesia, _ = ref.server_update(avg, p_amnesia, ref.init_state(gp), rnd)
+    assert not np.allclose(np.asarray(final["w"]), np.asarray(p_amnesia["w"]),
+                           atol=1e-5)
+
+    # reset per run: a second run from the same params reproduces the first
+    final2, _ = server.run(gp, num_rounds=3)
+    np.testing.assert_allclose(
+        np.asarray(final["w"]), np.asarray(final2["w"]), atol=1e-7
+    )
+
+
+def test_fit_cache_keyed_on_optimizer():
+    """Regression: with lr=0.0 the built fit closure captures the client's
+    own optimizer, but the cache key omitted it — two clients sharing a
+    loss_fn but constructed with different SGD momenta silently shared the
+    first client's update rule."""
+    from repro.core.client import _GLOBAL_FIT_CACHE
+    from repro.data.federated import ClientDataset
+    from repro.optim import sgd as make_sgd
+
+    m = build_model("mobilenet-head-office31")
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(3)
+    B = 16
+    x = rng.normal(size=(B, m.cfg.feature_dim)).astype(np.float32)
+    y = rng.integers(0, m.cfg.num_classes, B).astype(np.int32)
+
+    def client(opt):
+        # identical shard (one full batch per step: order-invariant); two
+        # epochs so momentum shows up on the second step
+        return JaxClient(client_id=0, loss_fn=m.loss_fn,
+                         dataset=ClientDataset(client_id=0, x=x, y=y),
+                         batch_size=B, optimizer=opt)
+
+    opt_plain = make_sgd(0.05)
+    c_plain = client(opt_plain)
+    c_momentum = client(make_sgd(0.05, momentum=0.9))
+    from repro.core import FitIns as _FitIns
+
+    ins = lambda: _FitIns(parameters=params, config={"epochs": 2})
+    r_plain = c_plain.fit(ins())
+    size_after_first = len(_GLOBAL_FIT_CACHE)
+    r_momentum = c_momentum.fit(ins())
+    # different optimizers must NOT share a compiled closure...
+    assert len(_GLOBAL_FIT_CACHE) == size_after_first + 1
+    assert not np.allclose(
+        np.asarray(r_plain.parameters["head"]["w1"]),
+        np.asarray(r_momentum.parameters["head"]["w1"]),
+    )
+    # ...while a client sharing the SAME optimizer object still hits cache
+    c_same = client(opt_plain)
+    r_same = c_same.fit(ins())
+    assert len(_GLOBAL_FIT_CACHE) == size_after_first + 1
+    np.testing.assert_allclose(
+        np.asarray(r_same.parameters["head"]["w1"]),
+        np.asarray(r_plain.parameters["head"]["w1"]),
+    )
 
 
 class _ZeroExampleClient(Client):
