@@ -1,0 +1,181 @@
+"""Straggler benchmark: sync vs Deadline vs BufferedAsync on a mixed fleet.
+
+The virtual-clock layer's reason to exist, measured: on a Pixel/Jetson/TPU
+fleet whose slowest device steps ~37x slower than its fastest, lockstep
+FedAvg pays the straggler's wall clock every round.  This harness runs the
+same task under three round policies and reports the paper's axes —
+accuracy, simulated convergence time, energy — plus participation and
+staleness:
+
+- ``sync``      — ``SyncAll``: the classic loop; every round waits for the
+  slowest pixel.
+- ``deadline``  — ``Deadline(tau)``: rounds cut at the Jetson-class round
+  time; pixels are dropped (wasted work is charged) but the clock flies.
+- ``fedbuff``   — ``FedBuffStrategy`` + ``BufferedAsync(K)``: aggregate the
+  first K arrivals, stragglers report late with staleness-discounted
+  weight.  Runs 2x the rounds of sync — that is the async story: more
+  aggregations in less virtual time.
+
+Rows print CSV-style like the other benches; ``--out`` (default
+``BENCH_straggler.json``) captures the full result set machine-readably so
+the perf trajectory accumulates across PRs.
+
+``--smoke`` is the CI guard (tiny model, 4 sync rounds) and asserts the
+ISSUE-5 acceptance criteria:
+
+- FedBuff reaches the seed FedAvg eval accuracy (within 0.02), and
+- both cost-driven policies finish in less virtual wall-clock than
+  ``SyncAll`` on the straggler-heavy fleet.
+
+  PYTHONPATH=src python -m benchmarks.straggler_bench [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core import (
+    AvailabilityTrace, BufferedAsync, Deadline, FedAvg, FedBuffStrategy,
+    JaxClient, PROFILES, Server, SyncAll,
+)
+from repro.core.server import make_cost_model_for
+from repro.data.federated import dirichlet_partition
+from repro.data.synthetic import make_features
+from repro.models import build_model
+
+# straggler-heavy: one datacenter chip, two edge boards, three phones —
+# step times 0.010 / 0.153 / 0.290-0.370 s (a ~37x spread)
+FLEET = (
+    "tpu-v5e-chip", "jetson-tx2-gpu", "jetson-tx2-gpu",
+    "pixel-2", "pixel-2", "pixel-3",
+)
+
+
+def _setup(seed=0, n=1200):
+    m = build_model("mobilenet-head-office31")
+    data = make_features(n=n, num_classes=31, feature_dim=m.cfg.feature_dim,
+                         seed=seed)
+    shards = dirichlet_partition(data, n_clients=len(FLEET), alpha=100.0,
+                                 seed=seed)
+    params = m.init(jax.random.key(seed))
+    mask = m.trainable_mask(params)
+    clients = [
+        JaxClient(client_id=c.client_id, loss_fn=m.loss_fn, dataset=c,
+                  batch_size=32, trainable_mask=mask, device_profile=prof)
+        for c, prof in zip(shards, FLEET)
+    ]
+    cm = make_cost_model_for(params, [PROFILES[p] for p in FLEET])
+    return m, params, clients, cm
+
+
+def _run(policy_name, strategy, policy, rounds, *, availability=None, seed=0):
+    """One fresh experiment (clients rebuilt: the batch cursor is stateful)."""
+    m, params, clients, cm = _setup(seed=seed)
+    srv = Server(strategy=strategy, clients=clients, cost_model=cm,
+                 policy=policy, availability=availability)
+    srv.logger.quiet = True
+    _, hist = srv.run(params, num_rounds=rounds)
+    return {
+        "policy": policy_name,
+        "rounds": rounds,
+        "final_acc": hist.final_accuracy(),
+        "total_time_s": hist.total_time_s,
+        "total_energy_kj": hist.total_energy_j / 1e3,
+        "comm_mb": sum(r.comm_bytes for r in hist.rounds) / 1e6,
+        "mean_participants": float(np.mean([r.participants for r in hist.rounds])),
+        "dropped_total": sum(r.dropped for r in hist.rounds),
+        "mean_staleness": float(np.mean([r.staleness_mean for r in hist.rounds])),
+        # per ROUND (None on eval-less rounds), aligned with wall_series so
+        # time-to-accuracy arithmetic stays correct under eval_every > 1
+        "acc_series": [r.eval_acc for r in hist.rounds],
+        "wall_series": [r.wall_time_s for r in hist.rounds],
+    }
+
+
+def time_to_acc(run: dict, target: float) -> float | None:
+    """History.time_to_accuracy over the serialized series (same contract:
+    cumulative virtual wall time through the first eval round >= target)."""
+    t = 0.0
+    for wall, acc in zip(run["wall_series"], run["acc_series"]):
+        t += wall
+        if acc is not None and acc >= target:
+            return t
+    return None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: tiny run + acceptance asserts")
+    ap.add_argument("--out", default="BENCH_straggler.json")
+    args = ap.parse_args()
+    rounds = 4 if args.smoke else args.rounds
+
+    m, params, clients, cm = _setup()
+    spe = clients[0].steps_per_epoch()
+    # cut where the Jetson class (client 1) finishes a full round —
+    # compute AND comm — with 25% slack: TPUs+Jetsons report, pixels drop
+    tau = 1.25 * cm.client_round_cost(1, spe).t_total_s
+
+    fedbuff = FedBuffStrategy(local_epochs=1, local_lr=0.1, buffer_size=3,
+                              max_staleness=4, alpha=0.5)
+    runs = [
+        _run("sync", FedAvg(local_epochs=1, local_lr=0.1), SyncAll(), rounds),
+        _run("deadline", FedAvg(local_epochs=1, local_lr=0.1),
+             Deadline(tau=tau), rounds),
+        # async aggregates K=3 of 6 per round: 2x the rounds in (far) less
+        # virtual time is the point
+        _run("fedbuff", fedbuff, fedbuff.make_policy(), 2 * rounds),
+    ]
+    if not args.smoke:
+        # churn study: the sync loop under seeded dropout/jitter traces
+        trace = AvailabilityTrace.from_profiles(
+            [PROFILES[p] for p in FLEET], seed=0, jitter_std=0.1
+        )
+        runs.append(_run("sync_churn", FedAvg(local_epochs=1, local_lr=0.1),
+                         SyncAll(), rounds, availability=trace))
+
+    by_name = {r["policy"]: r for r in runs}
+    target = 0.9 * by_name["sync"]["final_acc"]
+    for r in runs:
+        r["time_to_target_s"] = time_to_acc(r, target)
+        print(
+            f"straggler[{r['policy']}] rounds={r['rounds']} "
+            f"acc={r['final_acc']:.3f} wall={r['total_time_s']:.1f}s "
+            f"tta@{target:.2f}={r['time_to_target_s']} "
+            f"energy={r['total_energy_kj']:.2f}kJ comm={r['comm_mb']:.2f}MB "
+            f"parts={r['mean_participants']:.1f} "
+            f"dropped={r['dropped_total']} stale={r['mean_staleness']:.2f}"
+        )
+
+    with open(args.out, "w") as f:
+        json.dump({
+            "bench": "straggler", "fleet": FLEET, "rounds": rounds,
+            "tau_s": tau, "target_acc": target, "runs": runs,
+        }, f, indent=2, default=float)
+    print(f"straggler[json] wrote {args.out}")
+
+    # acceptance guards (CI runs --smoke): the cost-driven policies beat
+    # lockstep wall-clock, and buffered async still reaches FedAvg accuracy
+    sync, ddl, buf = by_name["sync"], by_name["deadline"], by_name["fedbuff"]
+    assert ddl["total_time_s"] < sync["total_time_s"], (
+        f"Deadline wall {ddl['total_time_s']} !< SyncAll {sync['total_time_s']}"
+    )
+    assert buf["total_time_s"] < sync["total_time_s"], (
+        f"BufferedAsync wall {buf['total_time_s']} !< SyncAll "
+        f"{sync['total_time_s']} (even at 2x rounds)"
+    )
+    assert buf["final_acc"] >= sync["final_acc"] - 0.02, (
+        f"FedBuff acc {buf['final_acc']} below FedAvg {sync['final_acc']}"
+    )
+    assert ddl["dropped_total"] > 0 and buf["mean_staleness"] > 0
+    print("straggler[guards] OK: deadline+async beat sync wall; "
+          "fedbuff holds FedAvg accuracy")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,13 +6,20 @@ from .protocol import (
 )
 from .client import Client, JaxClient
 from .server import Server, History, RoundRecord, make_cost_model_for
-from .cost_model import CostModel, DeviceProfile, PROFILES, AWS_DEVICE_FARM
+from .cost_model import (
+    CostModel, DeviceProfile, PROFILES, AWS_DEVICE_FARM, AvailabilityTrace,
+    ClientCost,
+)
+from .scheduler import (
+    VirtualClock, Arrival, RoundOutcome, RoundPolicy, SyncAll, Deadline,
+    BufferedAsync,
+)
 from .rounds import RoundSpec, make_round_step, make_client_update
 from .compression import (
     UpdateCodec, Int8Codec, TopKCodec, NullCodec, MixedCodec,
     BandwidthCodecPolicy, compress_update, decompress_update,
 )
 from .strategy import (
-    Strategy, FedAvg, FedProx, FedTau, FedOpt, FedAdam, FedYogi, FedAvgM,
-    STRATEGIES, tau_from_reference_processor,
+    Strategy, FedAvg, FedProx, FedTau, FedBuffStrategy, FedOpt, FedAdam,
+    FedYogi, FedAvgM, STRATEGIES, tau_from_reference_processor,
 )

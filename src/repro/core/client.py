@@ -20,7 +20,9 @@ import numpy as np
 
 from repro.data.federated import ClientDataset
 from repro.optim import Optimizer, sgd
-from repro.utils.pytree import tree_size, tree_sq_norm, tree_sub, tree_where
+from repro.utils.pytree import (
+    tree_bytes, tree_size, tree_sq_norm, tree_sub, tree_where,
+)
 
 from .compression import compress_update
 from .cost_model import PROFILES
@@ -59,6 +61,16 @@ class Client:
         objects do not leak one experiment's compression state into the
         next."""
 
+    def discard_update(self) -> None:
+        """The scheduler discarded this client's last ``fit`` (deadline
+        drop / staleness expiry): roll back any state that assumed the
+        update was delivered.  ``fit`` commits the error-feedback residual
+        as if the wire reached the server; an update that never did must
+        leave the residual exactly as it entered the round — the same
+        contract as the jitted engine's participation mask.  One level of
+        rollback suffices: a client has at most one fit in flight (the
+        Server never re-samples a busy client)."""
+
 
 @dataclass
 class JaxClient(Client):
@@ -72,6 +84,9 @@ class JaxClient(Client):
     _params: PyTree = None
     _fit_cache: dict = field(default_factory=dict, repr=False)
     _residual: Any = field(default=None, repr=False)  # error-feedback carry
+    # pre-fit residual, kept until the scheduler's verdict: discard_update
+    # rolls back to it when the arrival is dropped/expired
+    _residual_prev: Any = field(default=None, repr=False)
 
     def __post_init__(self):
         if self.optimizer is None:
@@ -91,9 +106,26 @@ class JaxClient(Client):
 
     def reset_state(self) -> None:
         self._residual = None
+        self._residual_prev = None
+
+    def discard_update(self) -> None:
+        self._residual = self._residual_prev
 
     def steps_per_epoch(self) -> int:
         return self.dataset.steps_per_epoch(self.batch_size)
+
+    @staticmethod
+    def _comm_time_s(ins: FitIns, cfg: dict, prof) -> float:
+        """This round's transfer time on the device's own links: the full
+        global model down, the codec's wire (or the full model) up.  The
+        downlink is always a raw pytree on the in-process transport."""
+        codec = cfg.get("codec")
+        down_b = tree_bytes(ins.parameters)
+        up_b = (
+            codec.wire_bytes(tree_size(ins.parameters))
+            if codec is not None else down_b
+        )
+        return prof.comm_time_s(up_b, down_b)
 
     def _build_fit(self, n_steps: int, mu: float, lr: float):
         opt = sgd(lr) if lr else self.optimizer
@@ -133,11 +165,27 @@ class JaxClient(Client):
         return fit_steps
 
     def fit(self, ins: FitIns) -> FitRes:
+        self._residual_prev = self._residual  # rollback point (discard_update)
         cfg = ins.config
         epochs = int(cfg.get("epochs", 1))
         spe = self.steps_per_epoch()
         full_steps = epochs * spe
         budget = int(cfg.get("max_steps", full_steps))
+        # on-device deadline enforcement: a client that knows its own step
+        # time AND link speeds truncates local work so compute + comm fit
+        # the round cutoff, instead of being dropped by the scheduler (the
+        # server-side FedTau budget is compute-only; this closes the gap
+        # for comm-heavy rounds and covers strategies shipping only the
+        # deadline).  If even one step + comm cannot fit, the client tries
+        # anyway — the scheduler will judge it.
+        deadline = float(cfg.get("deadline_s", 0.0))
+        prof = PROFILES.get(self.device_profile)
+        if deadline > 0.0 and prof is not None:
+            budget = max(
+                1, min(budget, prof.steps_in_budget(
+                    max(0.0, deadline - self._comm_time_s(ins, cfg, prof))
+                ))
+            )
         mu = float(cfg.get("mu", 0.0))
         lr = float(cfg.get("lr", 0.0))
 

@@ -39,6 +39,14 @@ class DeviceProfile:
         """How many local steps fit in a cutoff budget tau (paper Table 3)."""
         return int(np.floor(tau_s / self.step_time_s))
 
+    def comm_time_s(self, up_bytes: float, down_bytes: float) -> float:
+        """Transfer time on this device's links — the ONE owner of the
+        link-time formula (CostModel charges it, JaxClient truncates its
+        deadline budget by it, the Server windows wasted work with it)."""
+        return up_bytes * 8 / (self.uplink_mbps * 1e6) + down_bytes * 8 / (
+            self.downlink_mbps * 1e6
+        )
+
 
 # calibrated against the paper's tables (see module docstring)
 JETSON_TX2_GPU = DeviceProfile("jetson-tx2-gpu", step_time_s=0.153, active_power_w=9.0,
@@ -70,9 +78,112 @@ PROFILES: dict[str, DeviceProfile] = {
 AWS_DEVICE_FARM = ("pixel-4", "pixel-3", "pixel-2", "galaxy-tab-s6", "galaxy-tab-s4")
 
 
+# battery-powered device classes sit below this idle draw; they churn (lose
+# charge, lose WiFi, get picked up) far more than plugged-in edge boards
+_BATTERY_IDLE_W = 1.5
+
+
+@dataclass(frozen=True)
+class AvailabilityTrace:
+    """Seeded per-client availability + step-time jitter schedules.
+
+    Real fleets churn: phones drop off charger/WiFi mid-experiment, new
+    devices enroll late, and a device's step time wobbles round-to-round
+    with thermals and background load.  This trace makes that churn a
+    *deterministic function of (seed, round)* so an experiment — and its
+    control — can be replayed exactly:
+
+    - ``dropout``: per-client probability of sitting a round out, drawn
+      i.i.d. per (seed, round).  ``from_profiles`` derives it from the
+      ``DeviceProfile``: battery-class devices (idle draw < 1.5 W) churn at
+      ``mobile_dropout``, plugged-in boards at ``plugged_dropout``.
+    - ``join_round``: the first round a client exists (late enrollment).
+    - ``jitter_std``: sigma of a lognormal multiplicative step-time factor
+      (1.0 = nominal), fed to ``CostModel.client_round_cost``.
+
+    ``full(n)`` is the degenerate trace (everyone always up, no jitter) —
+    by construction it reproduces the pre-scheduler lockstep fleet.
+    """
+
+    n_clients: int
+    seed: int = 0
+    dropout: tuple[float, ...] = ()        # () = nobody drops
+    join_round: tuple[int, ...] = ()       # () = everyone from round 1
+    jitter_std: float = 0.0
+
+    def __post_init__(self):
+        if self.dropout:
+            assert len(self.dropout) == self.n_clients
+        if self.join_round:
+            assert len(self.join_round) == self.n_clients
+
+    @classmethod
+    def full(cls, n_clients: int) -> "AvailabilityTrace":
+        return cls(n_clients=n_clients)
+
+    @classmethod
+    def from_profiles(
+        cls,
+        profiles: list[DeviceProfile],
+        *,
+        seed: int = 0,
+        mobile_dropout: float = 0.15,
+        plugged_dropout: float = 0.02,
+        jitter_std: float = 0.1,
+        late_join: int = 0,
+    ) -> "AvailabilityTrace":
+        """Churn schedule from the fleet's hardware profiles.
+
+        ``late_join`` > 0 enrolls that many of the slowest clients only
+        from round ``late_join + 1`` (a staggered rollout).
+        """
+        drop = tuple(
+            mobile_dropout if p.idle_power_w < _BATTERY_IDLE_W else plugged_dropout
+            for p in profiles
+        )
+        join = [1] * len(profiles)
+        if late_join > 0:
+            slowest = np.argsort([-p.step_time_s for p in profiles])
+            for cid in slowest[:late_join]:
+                join[int(cid)] = late_join + 1
+        return cls(
+            n_clients=len(profiles), seed=seed, dropout=drop,
+            join_round=tuple(join), jitter_std=jitter_std,
+        )
+
+    def _rng(self, rnd: int, stream: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed, rnd, stream))
+
+    def available(self, rnd: int, client_id: int | None = None):
+        """(n_clients,) bool — who is up this round (or one client's bool)."""
+        up = np.ones(self.n_clients, bool)
+        if self.join_round:
+            up &= np.asarray(self.join_round) <= rnd
+        if self.dropout:
+            u = self._rng(rnd, 0).random(self.n_clients)
+            up &= u >= np.asarray(self.dropout)
+        return up if client_id is None else bool(up[client_id])
+
+    def step_jitter(self, rnd: int) -> np.ndarray:
+        """(n_clients,) multiplicative step-time factors for this round."""
+        if self.jitter_std <= 0.0:
+            return np.ones(self.n_clients)
+        return np.exp(
+            self._rng(rnd, 1).normal(0.0, self.jitter_std, self.n_clients)
+        )
+
+
 @dataclass
 class ClientCost:
-    """Per-round, per-client accounting record."""
+    """Per-round, per-client accounting record.
+
+    ``t_arrival_s`` records when the report lands on the round's *virtual
+    timeline* (launch time + t_total on the scheduler's clock).  The Server
+    stamps it at dispatch and derives ``scheduler.Arrival.finish_t`` from
+    it, so this field is the source of truth the policies ultimately
+    schedule against.  0.0 means "not scheduled" (legacy lockstep
+    accounting, where only t_total_s matters).
+    """
 
     client_id: int
     profile: str
@@ -81,6 +192,7 @@ class ClientCost:
     t_comm_s: float
     e_compute_j: float
     e_comm_j: float
+    t_arrival_s: float = 0.0
 
     @property
     def t_total_s(self) -> float:
@@ -106,20 +218,22 @@ class CostModel:
         *,
         payload_bytes: int | None = None,
         uplink_bytes: int | None = None,
+        jitter: float = 1.0,
     ) -> ClientCost:
         """Time/energy for one client-round.
 
         ``payload_bytes`` overrides both directions (legacy callers);
         ``uplink_bytes`` overrides only the client->server leg — the codec-
         compressed wire — while the downlink stays the full global model.
+        ``jitter`` is a multiplicative step-time factor for this round
+        (thermal throttling, background load): an ``AvailabilityTrace``
+        draws one per client per round, 1.0 means nominal.
         """
         p = self.profiles[client_id % len(self.profiles)]
         down = self.update_bytes if payload_bytes is None else payload_bytes
         up = down if uplink_bytes is None else uplink_bytes
-        t_compute = steps * p.step_time_s
-        t_comm = up * 8 / (p.uplink_mbps * 1e6) + down * 8 / (
-            p.downlink_mbps * 1e6
-        )
+        t_compute = steps * p.step_time_s * jitter
+        t_comm = p.comm_time_s(up, down)
         return ClientCost(
             client_id=client_id,
             profile=p.name,
@@ -179,11 +293,40 @@ class CostModel:
         return sum((down if up is None else up) + down for up in ups)
 
     def round_wall_time(self, costs: list[ClientCost]) -> float:
-        """Synchronous FedAvg: the round ends when the slowest client reports."""
-        return max(c.t_total_s for c in costs)
+        """Synchronous FedAvg: the round ends when the slowest client reports.
+
+        An *empty* round — availability dropouts can leave zero reporters —
+        costs zero wall time (the clock still advances by whatever the
+        scheduler decides, but there is no slowest client to wait for).
+        """
+        return max((c.t_total_s for c in costs), default=0.0)
+
+    def wasted_energy(self, cost: ClientCost, window_s: float) -> float:
+        """Burn of an aborted client-round within its first ``window_s``
+        seconds — the ONE owner of the phase split a scheduler cutoff
+        induces (downlink radio, then compute, then uplink radio; each
+        phase charges only the fraction that fit).  A window covering the
+        whole round charges the complete cost.
+        """
+        if window_s >= cost.t_total_s:
+            return cost.e_total_j
+        p = self.profiles[cost.client_id % len(self.profiles)]
+        window = max(0.0, window_s)
+        t_down = p.comm_time_s(0, self.update_bytes)
+        t_active = min(cost.t_compute_s, max(0.0, window - t_down))
+        t_up_used = max(0.0, window - t_down - cost.t_compute_s)
+        return (
+            (min(window, t_down) + t_up_used) * self.comm_power_w
+            + t_active * p.active_power_w
+        )
 
     def round_energy(self, costs: list[ClientCost]) -> float:
-        """Active energy + straggler idle burn while waiting for the round."""
+        """Active energy + straggler idle burn while waiting for the round.
+
+        Empty rounds burn nothing (no client computed, nobody idled).
+        """
+        if not costs:
+            return 0.0
         wall = self.round_wall_time(costs)
         idle = sum(
             (wall - c.t_total_s) * self.profiles[c.client_id % len(self.profiles)].idle_power_w

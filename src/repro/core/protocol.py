@@ -158,6 +158,11 @@ class FitRes:
     parameters: Parameters | CompressedParameters | PyTree  # update (or delta)
     num_examples: int
     metrics: dict = field(default_factory=dict)  # incl. steps_done, t_compute_s
+    # rounds elapsed between the global this update trained from and the
+    # round that consumes it; the scheduler-driven Server stamps it when a
+    # buffered-async arrival is aggregated late (0 = fresh, the default).
+    # FedBuffStrategy discounts aggregation weight by (1 + staleness)^-alpha.
+    staleness: int = 0
 
 
 @dataclass

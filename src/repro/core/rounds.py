@@ -5,8 +5,19 @@ SGD steps from the current global model, then the Strategy aggregates.  All
 execution modes share ONE uniform contract::
 
     round_step(global_params, server_state, client_state, batches, weights,
-               step_budgets, rnd)
+               step_budgets, rnd, mask=None)
         -> (new_global, new_server_state, new_client_state, metrics)
+
+``mask`` is the scheduler's **participation mask** — a static-shaped (C,)
+0/1 float vector realizing a virtual-clock decision (core/scheduler.py:
+deadline drops, availability dropouts) inside ONE jitted round: a masked
+client still runs its shape-static local work, but contributes zero weight
+under the existing ``safe_weight_sum`` denominator (so the aggregate is
+bitwise what it would be without the client), its error-feedback residual
+row carries UNCHANGED (it never transmitted, so no compression error
+telescopes), and it is excluded from the loss/steps metrics.  ``mask=None``
+(the default) takes the exact pre-mask code path — an all-ones mask and
+``None`` produce bitwise-identical results on every mode.
 
 ``client_state`` is a codec-owned pytree
 (``spec.codec.init_client_state(n_clients, n_params)``): error-feedback
@@ -65,6 +76,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optim import Optimizer
 from repro.utils.pytree import safe_weight_sum, tree_where
@@ -202,6 +214,74 @@ def _state_metrics(new_client_state) -> dict:
     return {"residual_norm_mean": jnp.mean(jnp.concatenate(rows))}
 
 
+def _carry_masked_state(codec, mask, old_state, new_state):
+    """Masked (non-participating) clients' codec state rows carry unchanged.
+
+    A dropped client never transmitted, so its error-feedback residual must
+    not absorb this round's untransmitted delta — the row it entered the
+    round with is the row it leaves with.  Handles ``MixedCodec``'s
+    per-group tuple state by slicing the fleet mask with each group's
+    static client indices.
+    """
+    def keep_rows(m):
+        mc = jnp.asarray(m)
+
+        def leaf(o, n):
+            return jnp.where(
+                mc.reshape((-1,) + (1,) * (n.ndim - 1)) > 0, n, o
+            )
+
+        return leaf
+
+    if isinstance(codec, MixedCodec):
+        assign = np.asarray(codec.assignment)
+        out = list(new_state)
+        for g in range(len(codec.codecs)):
+            if not jax.tree.leaves(new_state[g]):
+                continue  # stateless group (Null): nothing to carry
+            idx = np.flatnonzero(assign == g)
+            out[g] = jax.tree.map(
+                keep_rows(mask[idx]), old_state[g], new_state[g]
+            )
+        return tuple(out)
+    if not jax.tree.leaves(new_state):
+        return new_state
+    return jax.tree.map(keep_rows(mask), old_state, new_state)
+
+
+def _masked_metrics(losses, steps, weights, mask):
+    """Participation-aware loss/steps metrics (one definition, all modes).
+
+    ``jnp.where`` — not multiplication — so a masked client's loss can be
+    NaN/inf (it diverged, which may be WHY it was dropped) without
+    poisoning the fleet metrics.
+    """
+    wf = weights.astype(jnp.float32)
+    if mask is None:
+        return {
+            "client_loss_mean": jnp.sum(losses * wf) / safe_weight_sum(wf),
+            "client_loss_max": jnp.max(losses),
+            "steps_total": jnp.sum(steps),
+        }
+    mf = mask.astype(jnp.float32)
+    w_eff = wf * mf
+    losses_eff = jnp.where(mf > 0, losses, 0.0)
+    # a fully-masked round has no defined loss: NaN (matching the Server's
+    # empty-round train_loss), never a 0.0 that reads like convergence or a
+    # -inf max that poisons series mins downstream
+    any_live = jnp.any(mf > 0)
+    return {
+        "client_loss_mean": jnp.where(
+            any_live,
+            jnp.sum(losses_eff * w_eff) / safe_weight_sum(w_eff), jnp.nan,
+        ),
+        "client_loss_max": jnp.where(
+            any_live, jnp.max(jnp.where(mf > 0, losses, -jnp.inf)), jnp.nan
+        ),
+        "steps_total": jnp.sum(jnp.where(mf > 0, steps, 0)),
+    }
+
+
 def make_round_step(
     loss_fn: Callable,
     opt: Optimizer,
@@ -238,7 +318,7 @@ def make_round_step(
 
         axes = client_axes
 
-        def per_client(global_params, batches, weight, budget, state):
+        def per_client(global_params, batches, weight, budget, mask_c, state):
             b0 = jax.tree.map(lambda x: x[0], batches)
             new_p, loss, steps = client_update(global_params, b0, budget[0])
 
@@ -250,8 +330,23 @@ def make_round_step(
             )
             state_row = jax.tree.map(lambda x: x[0], state)
             dec_delta, new_row = codec.transmit_tree(delta, state_row)
+            if mask_c is not None:
+                # participation mask: a dropped client never transmitted —
+                # its residual row carries unchanged across the round, and
+                # its delta is zeroed BEFORE the psum (zero weight alone
+                # would let a diverged client's 0 * NaN poison the sum)
+                new_row = jax.tree.map(
+                    lambda n, o: jnp.where(mask_c[0] > 0, n, o),
+                    new_row, state_row,
+                )
+                dec_delta = jax.tree.map(
+                    lambda d: jnp.where(mask_c[0] > 0, d, jnp.zeros_like(d)),
+                    dec_delta,
+                )
 
             wf = weight[0].astype(jnp.float32)
+            if mask_c is not None:
+                wf = wf * mask_c[0].astype(jnp.float32)
             wsum = wf
             for ax in reversed(axes):
                 wsum = jax.lax.psum(wsum, ax)
@@ -275,32 +370,43 @@ def make_round_step(
 
         def round_step(
             global_params, server_state, client_state, batches, weights,
-            step_budgets, rnd,
+            step_budgets, rnd, mask=None,
         ):
             batch_specs = jax.tree.map(lambda x: P(axes), batches)
             param_specs_manual = jax.tree.map(lambda x: P(), global_params)
             state_specs = jax.tree.map(
                 lambda x: P(axes, *([None] * (x.ndim - 1))), client_state
             )
-            avg, losses, steps, new_client_state = _shard_map(
-                per_client,
-                mesh,
-                in_specs=(
+            if mask is None:
+                body = lambda gp, b, w, bu, st: per_client(gp, b, w, bu, None, st)
+                in_specs = (
                     param_specs_manual, batch_specs, P(axes), P(axes), state_specs,
-                ),
+                )
+                args = (global_params, batches, weights, step_budgets, client_state)
+            else:
+                body = per_client
+                in_specs = (
+                    param_specs_manual, batch_specs, P(axes), P(axes), P(axes),
+                    state_specs,
+                )
+                args = (
+                    global_params, batches, weights, step_budgets, mask,
+                    client_state,
+                )
+            avg, losses, steps, new_client_state = _shard_map(
+                body,
+                mesh,
+                in_specs=in_specs,
                 out_specs=(param_specs_manual, P(axes), P(axes), state_specs),
                 axis_names=set(axes),
-            )(global_params, batches, weights, step_budgets, client_state)
+            )(*args)
             new_global, new_state = strategy.server_update(
                 avg, global_params, server_state, rnd
             )
-            wf = weights.astype(jnp.float32)
             metrics = {
                 # examples-weighted, like every other execution mode: the
                 # same round must report the same metric everywhere
-                "client_loss_mean": jnp.sum(losses * wf) / safe_weight_sum(wf),
-                "client_loss_max": jnp.max(losses),
-                "steps_total": jnp.sum(steps),
+                **_masked_metrics(losses, steps, weights, mask),
                 **_state_metrics(new_client_state),
             }
             return new_global, new_state, new_client_state, metrics
@@ -311,27 +417,44 @@ def make_round_step(
 
         def round_step(
             global_params, server_state, client_state, batches, weights,
-            step_budgets, rnd,
+            step_budgets, rnd, mask=None,
         ):
             new_params, losses, steps = jax.vmap(
                 client_update, in_axes=(None, 0, 0)
             )(global_params, batches, step_budgets)
 
             # codec-owned aggregation: wire layout + encoded-payload reduce
-            # for compressing codecs, a leafwise weighted mean for NullCodec
-            avg_params, new_client_state = codec.aggregate_updates(
-                new_params, global_params, weights, client_state
+            # for compressing codecs, a leafwise weighted mean for NullCodec.
+            # A masked client aggregates at zero weight (zero contribution
+            # under the one safe_weight_sum denominator); its params are
+            # pinned back to the global FIRST — zero weight alone is not
+            # enough, a diverged (NaN/inf) dropped client would still
+            # poison the reduce through 0 * NaN...
+            if mask is not None:
+                new_params = jax.tree.map(
+                    lambda p, g: jnp.where(
+                        mask.reshape((-1,) + (1,) * g.ndim) > 0, p, g[None]
+                    ),
+                    new_params, global_params,
+                )
+            w_agg = weights if mask is None else (
+                weights.astype(jnp.float32) * mask.astype(jnp.float32)
             )
+            avg_params, new_client_state = codec.aggregate_updates(
+                new_params, global_params, w_agg, client_state
+            )
+            if mask is not None:
+                # ...and, having transmitted nothing, keeps its residual row
+                new_client_state = _carry_masked_state(
+                    codec, mask, client_state, new_client_state
+                )
             new_global, new_state = strategy.server_update(
                 avg_params, global_params, server_state, rnd
             )
-            wf = weights.astype(jnp.float32)
             metrics = {
                 # examples-weighted (matches the sequential scan's running
                 # weighted mean): one metric definition across all modes
-                "client_loss_mean": jnp.sum(losses * wf) / safe_weight_sum(wf),
-                "client_loss_max": jnp.max(losses),
-                "steps_total": jnp.sum(steps),
+                **_masked_metrics(losses, steps, weights, mask),
                 **_state_metrics(new_client_state),
             }
             return new_global, new_state, new_client_state, metrics
@@ -348,21 +471,44 @@ def make_round_step(
 
     def round_step(
         global_params, server_state, client_state, batches, weights,
-        step_budgets, rnd,
+        step_budgets, rnd, mask=None,
     ):
         wf = weights.astype(jnp.float32)
-        wsum = safe_weight_sum(wf)
+        mf = None if mask is None else mask.astype(jnp.float32)
+        wsum = safe_weight_sum(wf if mf is None else wf * mf)
 
         def make_per_client(codec_g):
             def per_client(carry, xs):
                 delta_acc, loss_acc, loss_max, steps_acc = carry
-                client_batches, w, budget, state_row = xs
+                if mf is None:
+                    client_batches, w, budget, state_row = xs
+                    m = None
+                else:
+                    client_batches, w, budget, m, state_row = xs
                 new_params, loss, steps = client_update(
                     global_params, client_batches, budget
                 )
                 delta = jax.tree.map(jnp.subtract, new_params, global_params)
                 # codec round-trip: only what survives the wire is accumulated
                 dec_delta, new_row = codec_g.transmit_tree(delta, state_row)
+                if m is not None:
+                    # masked client: zero aggregation weight AND a zeroed
+                    # delta (0 * NaN from a diverged dropped client would
+                    # still poison the accumulator), residual row carried
+                    # unchanged (it never transmitted), metrics skip
+                    w = w * m
+                    dec_delta = jax.tree.map(
+                        lambda d: jnp.where(m > 0, d, jnp.zeros_like(d)),
+                        dec_delta,
+                    )
+                    new_row = jax.tree.map(
+                        lambda n, o: jnp.where(m > 0, n, o), new_row, state_row
+                    )
+                    loss = jnp.where(m > 0, loss, 0.0)
+                    loss_for_max = jnp.where(m > 0, loss, -jnp.inf)
+                    steps = jnp.where(m > 0, steps, 0)
+                else:
+                    loss_for_max = loss
                 scale = (w / wsum).astype(jnp.bfloat16)
                 delta_acc = _pin(jax.tree.map(
                     lambda acc, d: acc + scale * d.astype(jnp.bfloat16),
@@ -371,7 +517,7 @@ def make_round_step(
                 carry = (
                     delta_acc,
                     loss_acc + loss * w / wsum,
-                    jnp.maximum(loss_max, loss),
+                    jnp.maximum(loss_max, loss_for_max),
                     steps_acc + steps,
                 )
                 return carry, new_row
@@ -397,7 +543,9 @@ def make_round_step(
             for g, codec_g, idx in codec.groups():
                 xs_g = (
                     jax.tree.map(lambda x: x[idx], batches),
-                    wf[idx], step_budgets[idx], client_state[g],
+                    wf[idx], step_budgets[idx],
+                    *(() if mf is None else (mf[idx],)),
+                    client_state[g],
                 )
                 carry, new_states[g] = jax.lax.scan(
                     make_per_client(codec_g), carry, xs_g
@@ -406,9 +554,15 @@ def make_round_step(
         else:
             carry, new_client_state = jax.lax.scan(
                 make_per_client(codec), carry,
-                (batches, wf, step_budgets, client_state),
+                (batches, wf, step_budgets,
+                 *(() if mf is None else (mf,)), client_state),
             )
         delta, loss_mean, loss_max, steps_total = carry
+        if mf is not None:
+            # fully-masked round: no defined loss (see _masked_metrics)
+            any_live = jnp.any(mf > 0)
+            loss_mean = jnp.where(any_live, loss_mean, jnp.nan)
+            loss_max = jnp.where(any_live, loss_max, jnp.nan)
         # the averaged delta goes straight through server_update (FedAvg:
         # identity; FedOpt: server optimizer) — no stacked fp32 detour.
         avg_params = _pin(jax.tree.map(

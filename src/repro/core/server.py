@@ -4,22 +4,34 @@
 the CostModel plays the role of the physical fleet, charging wall-time and
 energy for every client's compute and communication.  History captures the
 paper's evaluation axes: accuracy / convergence time / energy per round.
+
+``Server.run`` is a thin driver over the **virtual-clock scheduler**
+(core/scheduler.py): every dispatched client becomes an ``Arrival`` event
+on a simulated timeline, and the configured ``RoundPolicy`` — lockstep
+``SyncAll`` (the default, reproducing the classic synchronous loop),
+``Deadline(tau)`` straggler cutoffs, or ``BufferedAsync`` staleness-tolerant
+aggregation — decides which arrivals each round consumes.  Wall time is the
+clock's elapsed virtual time, idle burn comes from the actual wait
+intervals the policy induced, and ``History`` records who participated and
+how stale their updates were.  An ``AvailabilityTrace`` adds seeded
+dropout/late-join churn and step-time jitter on top.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
 from repro.utils.logging import MetricsLogger
-from repro.utils.pytree import tree_bytes, tree_size
+from repro.utils.pytree import tree_add, tree_bytes, tree_size, tree_sub
 
 from .client import Client
-from .cost_model import CostModel
-from .protocol import CompressedParameters, EvaluateIns, FitIns, Parameters
+from .cost_model import AvailabilityTrace, CostModel
+from .protocol import (
+    CompressedParameters, EvaluateIns, Parameters, parameters_to_pytree,
+)
+from .scheduler import Arrival, Deadline, RoundPolicy, SyncAll, VirtualClock
 from .strategy.base import Strategy
 
 PyTree = Any
@@ -35,6 +47,12 @@ class RoundRecord:
     energy_j: float          # simulated fleet energy
     comm_bytes: int
     steps: int
+    # virtual-clock participation record: how many updates this round's
+    # aggregation consumed, how many arrivals it discarded (deadline drops
+    # + staleness expiries), and the mean staleness of what it kept
+    participants: int = 0
+    dropped: int = 0
+    staleness_mean: float = 0.0
 
 
 @dataclass
@@ -80,9 +98,13 @@ class Server:
     eval_every: int = 1
     codec: Any = None                    # UpdateCodec: uplink charged at
                                          # codec.wire_bytes, not tree_bytes
+    policy: RoundPolicy | None = None    # None -> SyncAll (lockstep FedAvg)
+    availability: AvailabilityTrace | None = None
     logger: MetricsLogger = field(default_factory=lambda: MetricsLogger("server"))
 
     def run(self, global_params: PyTree, num_rounds: int) -> tuple[PyTree, History]:
+        policy = self.policy if self.policy is not None else SyncAll()
+        clock = VirtualClock()
         history = History()
         client_ids = list(range(len(self.clients)))
         client_props = {cid: self.clients[cid].properties() for cid in client_ids}
@@ -92,48 +114,135 @@ class Server:
         # previous run, but DO accumulate across this run's rounds
         self.strategy.reset_server_state()
 
+        # per-client uplink fallback for raw-pytree payloads under a
+        # server-level codec (static across the run: the model shape is)
+        uplink_fallback = (
+            CostModel.fleet_uplink_bytes(
+                self.codec, tree_size(global_params), len(self.clients)
+            )
+            if self.cost_model is not None else None
+        )
+
+        # the cutoff rides in FitIns config ONLY when a Deadline policy will
+        # actually enforce it: clients that know their own step time + links
+        # then truncate local work to make the cutoff instead of being
+        # dropped.  Under SyncAll nothing is ever dropped, so shipping a
+        # deadline there would silently shrink step budgets (diverging from
+        # the paper's compute-only tau semantics) for zero scheduling gain.
+        deadline_cfg = None
+        if isinstance(policy, Deadline):
+            tau = policy.resolve_tau(self.strategy)
+            deadline_cfg = tau if np.isfinite(tau) else None
+
+        pending: list[Arrival] = []  # in-flight arrivals (BufferedAsync carry)
         for rnd in range(1, num_rounds + 1):
+            # ---- dispatch: sampled ∩ available ∩ not already in flight ----
+            busy = {a.client_id for a in pending}
+            # one trace draw per round (it is a deterministic function of
+            # (seed, rnd)), not one full-fleet draw per client
+            up = (
+                self.availability.available(rnd)
+                if self.availability is not None else None
+            )
+            eligible = [
+                cid for cid in client_ids
+                if cid not in busy and (up is None or up[cid])
+            ]
             fit_ins = self.strategy.configure_fit(
-                rnd, global_params, client_ids, client_properties=client_props
+                rnd, global_params, eligible, client_properties=client_props
+            ) if eligible else []
+            jitter = (
+                self.availability.step_jitter(rnd)
+                if self.availability is not None else None
             )
 
-            results, steps_per_client = [], []
+            launch_steps = 0
             for cid, ins in fit_ins:
+                if deadline_cfg is not None:
+                    ins.config.setdefault("deadline_s", deadline_cfg)
                 res = self.clients[cid].fit(ins)
-                results.append((cid, res))
-                steps_per_client.append(int(res.metrics.get("steps_done", 1)))
+                steps = int(res.metrics.get("steps_done", 1))
+                launch_steps += steps
+                cost = None
+                up_bytes = self._uplink_bytes_one(res, cid, uplink_fallback)
+                if self.cost_model is not None:
+                    cost = self.cost_model.client_round_cost(
+                        cid, steps, uplink_bytes=up_bytes,
+                        jitter=float(jitter[cid]) if jitter is not None else 1.0,
+                    )
+                    # the cost record owns the arrival time; the scheduler
+                    # event (Arrival.finish_t) is derived from it below
+                    cost.t_arrival_s = clock.now + cost.t_total_s
+                # keep the launch global only when a stale rebase could need
+                # it: compressed payloads are deltas (global-independent), so
+                # pinning a full model snapshot per in-flight arrival would
+                # be O(pending x model) of provably dead memory
+                launch_ref = (
+                    None if isinstance(res.parameters, CompressedParameters)
+                    else global_params
+                )
+                pending.append(Arrival(
+                    client_id=cid, launch_rnd=rnd, launch_t=clock.now,
+                    finish_t=cost.t_arrival_s if cost is not None else clock.now,
+                    cost=cost, payload=(res, launch_ref), uplink_bytes=up_bytes,
+                ))
 
-            # per-client uplink charge: the actual wire payload each client
-            # shipped (heterogeneous codecs => heterogeneous sizes), BEFORE
-            # the aggregate moves global_params past this round's baseline
-            uplink = (
-                self._uplink_bytes(results, global_params)
-                if self.cost_model is not None else None
-            )
+            # ---- the policy's verdict on everything in flight ----
+            outcome = policy.plan(clock, pending, rnd, strategy=self.strategy)
+            pending = list(outcome.carried)
+            clock.advance_to(outcome.round_end)
 
-            global_params = self.strategy.aggregate_fit(rnd, results, global_params)
+            # a discarded update never reached the aggregate: the client must
+            # roll back any state (error-feedback residual) that its fit()
+            # committed assuming delivery — the python-path twin of the
+            # jitted mask's carry-residual-unchanged contract
+            for a in (*outcome.dropped, *outcome.expired):
+                self.clients[a.client_id].discard_update()
+
+            results = []
+            for a in outcome.reported:
+                res, launch_global = a.payload
+                res.staleness = a.staleness_at(rnd)
+                if res.staleness > 0:
+                    self._rebase_stale(res, launch_global, global_params)
+                results.append((a.client_id, res))
+
+            if results:  # an empty round advances the clock, aggregates nothing
+                global_params = self.strategy.aggregate_fit(
+                    rnd, results, global_params
+                )
 
             # ---- system-cost accounting (the paper's §5 measurement) ----
-            # uplink is charged at each client's wire size (compressed-wire
-            # path); the downlink stays the full-precision global model.
-            wall, energy, comm = 0.0, 0.0, 0
+            # wall time is the clock's elapsed virtual time for this round;
+            # idle burn charges the actual wait each reporter endured; a
+            # deadline-dropped client charges its (wasted) compute up to the
+            # cutoff; uplink is charged at each reporter's wire size while
+            # the downlink stays the full-precision global per dispatch.
+            wall, energy, comm = outcome.wall_time_s, 0.0, 0
             if self.cost_model is not None:
-                costs = self.cost_model.round_costs(
-                    steps_per_client, uplink_bytes=uplink
-                )
-                wall = self.cost_model.round_wall_time(costs)
-                energy = self.cost_model.round_energy(costs)
-                comm = self.cost_model.round_comm_bytes(
-                    len(results), uplink_bytes=uplink
+                down = self.cost_model.update_bytes
+                energy = self._outcome_energy(outcome)
+                # expired arrivals that LANDED did cross the network (they
+                # arrived, then aged out) — their bytes count like their
+                # comm energy does; cancelled-in-flight expiries and
+                # deadline-dropped clients never completed an uplink
+                comm = down * len(fit_ins) + sum(
+                    down if a.uplink_bytes is None else a.uplink_bytes
+                    for a in (*outcome.reported, *outcome.expired)
+                    if a.finish_t <= outcome.round_end
                 )
 
             losses = [r.metrics.get("loss", 0.0) for _, r in results]
             ns = [r.num_examples for _, r in results]
             # all-zero example counts (empty shards / failed reads) must not
-            # crash np.average with a ZeroDivisionError: unweighted fallback
-            train_loss = float(
-                np.average(losses, weights=ns) if sum(ns) > 0 else np.mean(losses)
-            )
+            # crash np.average with a ZeroDivisionError: unweighted fallback;
+            # an empty round has no losses at all -> NaN, not a crash
+            if not losses:
+                train_loss = float("nan")
+            else:
+                train_loss = float(
+                    np.average(losses, weights=ns) if sum(ns) > 0 else np.mean(losses)
+                )
 
             eval_loss = eval_acc = None
             if rnd % self.eval_every == 0:
@@ -142,46 +251,106 @@ class Server:
             rec = RoundRecord(
                 rnd=rnd, train_loss=train_loss, eval_loss=eval_loss,
                 eval_acc=eval_acc, wall_time_s=wall, energy_j=energy,
-                comm_bytes=comm, steps=sum(steps_per_client),
+                comm_bytes=comm, steps=launch_steps,
+                participants=len(results),
+                dropped=len(outcome.dropped) + len(outcome.expired),
+                staleness_mean=outcome.mean_staleness,
             )
             history.add(rec)
             self.logger.log(
                 "round", rnd=rnd, loss=train_loss,
                 acc=-1.0 if eval_acc is None else eval_acc,
                 wall_s=wall, energy_kj=energy / 1e3,
+                clients=len(results), stale=outcome.mean_staleness,
             )
+
+        # arrivals still in flight when the run ends are abandoned: their
+        # clients roll back (the update never landed), and the wasted work
+        # is charged to the final round — otherwise BufferedAsync's cost
+        # totals would silently omit exactly its stragglers' burn
+        self._abandon_pending(pending, clock, history)
         return global_params, history
 
-    def _uplink_bytes(self, results, global_params) -> list[int] | None:
-        """Per-client uplink sizes for cost accounting.
+    def _abandon_pending(self, pending, clock, history) -> None:
+        for a in pending:
+            self.clients[a.client_id].discard_update()
+        if not pending or not history.rounds or self.cost_model is None:
+            return
+        rec = history.rounds[-1]
+        down = self.cost_model.update_bytes
+        for a in pending:
+            if a.cost is None:
+                continue
+            # downlink-then-compute burn for the window that fit before the
+            # experiment ended; uplink bytes only if the upload finished
+            # (the downlink bytes were already counted at dispatch time)
+            rec.energy_j += self._wasted_energy(a, clock.now)
+            if a.finish_t <= clock.now:
+                rec.comm_bytes += (
+                    down if a.uplink_bytes is None else a.uplink_bytes
+                )
 
-        Wire-format payloads (Parameters/CompressedParameters) are charged
-        at their actual serialized size; raw-pytree payloads fall back to
-        the server-level codec's wire size, or None (the cost model's
-        full-precision default) when no codec is configured anywhere.
+    @staticmethod
+    def _uplink_bytes_one(res, cid: int, fallback: list[int] | None) -> int | None:
+        """One client's uplink charge: the actual serialized wire size for
+        wire-format payloads, the server-level codec's size for raw pytrees
+        under a codec, else None (the cost model's full-precision default)."""
+        p = res.parameters
+        if isinstance(p, (Parameters, CompressedParameters)):
+            return p.num_bytes
+        return None if fallback is None else fallback[cid]
+
+    def _outcome_energy(self, outcome) -> float:
+        """Fleet energy for one scheduled round.
+
+        Reporters charge their full compute+comm plus idle burn for the
+        wait between their arrival and the round end; deadline-dropped
+        clients charge what they actually burned before the cutoff (the
+        downlink happens FIRST on the arrival timeline, then compute —
+        radio power for the downlink window, active power for whatever
+        compute fit after it) and never uplink; staleness-expired arrivals
+        completed their (wasted) work in full.  Each arrival is charged in
+        the round that resolves it.
         """
-        if not results:
-            return None
-        any_wire = any(
-            isinstance(r.parameters, (Parameters, CompressedParameters))
-            for _, r in results
+        e = 0.0
+        for a in outcome.reported:
+            p = self._profile(a.client_id)
+            e += a.cost.e_total_j
+            e += max(0.0, outcome.round_end - a.finish_t) * p.idle_power_w
+        for a in outcome.dropped:
+            e += self._wasted_energy(a, outcome.round_end)
+        for a in outcome.expired:
+            # landed expiries burned their full cost; one still in flight
+            # was cancelled at round end — only the window's burn happened
+            e += self._wasted_energy(a, outcome.round_end)
+        return e
+
+    def _profile(self, cid: int):
+        profiles = self.cost_model.profiles
+        return profiles[cid % len(profiles)]
+
+    def _wasted_energy(self, a: Arrival, until: float) -> float:
+        """Burn of an abandoned arrival inside its [launch_t, until) window
+        (the CostModel owns the phase-split arithmetic)."""
+        return self.cost_model.wasted_energy(
+            a.cost, max(0.0, until - a.launch_t)
         )
-        if not any_wire and self.codec is None:
-            return None
-        n = tree_size(global_params)
-        # one per-client charge table for the whole round (MixedCodec builds
-        # a per-client list; the helper also validates it against the fleet)
-        fallback = CostModel.fleet_uplink_bytes(self.codec, n, len(self.clients))
-        out = []
-        for cid, res in results:
-            p = res.parameters
-            if isinstance(p, (Parameters, CompressedParameters)):
-                out.append(p.num_bytes)
-            elif fallback is not None:
-                out.append(fallback[cid])
-            else:
-                out.append(tree_bytes(global_params))
-        return out
+
+    @staticmethod
+    def _rebase_stale(res, launch_global: PyTree, global_params: PyTree) -> None:
+        """Apply a stale update's *delta* to the current global.
+
+        ``CompressedParameters`` already IS a delta wire (decoded against
+        whatever global the aggregation holds), so it needs no rebase; raw
+        parameter payloads trained from an older global are rewritten as
+        ``current + (params - launch_global)`` — FedBuff's update rule.
+        """
+        p = res.parameters
+        if isinstance(p, CompressedParameters):
+            return
+        if isinstance(p, Parameters):
+            p = parameters_to_pytree(p, launch_global)
+        res.parameters = tree_add(global_params, tree_sub(p, launch_global))
 
     def _evaluate(self, global_params) -> tuple[float | None, float | None]:
         if self.eval_fn is not None:

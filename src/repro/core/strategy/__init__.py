@@ -1,5 +1,6 @@
 from .base import Strategy, weighted_mean, pseudo_gradient
 from .fedavg import FedAvg
+from .fedbuff import FedBuffStrategy
 from .fedprox import FedProx
 from .fedtau import FedTau, tau_from_reference_processor
 from .fedopt import FedOpt, FedAdam, FedYogi, FedAvgM
@@ -8,6 +9,7 @@ STRATEGIES = {
     "fedavg": FedAvg,
     "fedprox": FedProx,
     "fedtau": FedTau,
+    "fedbuff": FedBuffStrategy,
     "fedadam": FedAdam,
     "fedyogi": FedYogi,
     "fedavgm": FedAvgM,
@@ -16,5 +18,5 @@ STRATEGIES = {
 __all__ = [
     "Strategy", "weighted_mean", "pseudo_gradient",
     "FedAvg", "FedProx", "FedTau", "tau_from_reference_processor",
-    "FedOpt", "FedAdam", "FedYogi", "FedAvgM", "STRATEGIES",
+    "FedBuffStrategy", "FedOpt", "FedAdam", "FedYogi", "FedAvgM", "STRATEGIES",
 ]

@@ -45,6 +45,13 @@ class Strategy:
     fraction_fit: float = 1.0
     min_fit_clients: int = 1
     codec_policy: Any = None    # BandwidthCodecPolicy | None: per-device codecs
+    # client-sampling seed: the per-round stream is default_rng((seed, rnd))
+    # — tuple-seeded like AvailabilityTrace, so one experiment is
+    # reproducible AND two experiments with different seeds draw genuinely
+    # independent cohorts.  (Additive seed+rnd would make seed 10_001's
+    # round r replay seed 10_000's round r+1; the old hardcoded 10_000 made
+    # every "independent" run sample identical cohorts outright.)
+    seed: int = 10_000
     # python-path server state (e.g. FedOpt optimizer moments), carried
     # across aggregate_fit rounds exactly as the jitted engine threads
     # server_state through round_step; reset at the start of Server.run
@@ -73,13 +80,26 @@ class Strategy:
     def sample_clients(self, rnd: int, client_ids: Sequence[int]) -> list[int]:
         import numpy as np
 
-        n = self.num_fit_clients(len(client_ids))
-        rng = np.random.default_rng(10_000 + rnd)
+        if not client_ids:
+            return []  # availability dropouts can empty the eligible pool
+        n = min(self.num_fit_clients(len(client_ids)), len(client_ids))
+        rng = np.random.default_rng((self.seed, rnd))
         return sorted(rng.choice(client_ids, size=n, replace=False).tolist())
 
     def fit_config(self, rnd: int, client_id: int) -> dict:
         """Per-round, per-client config shipped in FitIns (epochs, tau, lr...)."""
         return {}
+
+    def round_deadline_s(self) -> float | None:
+        """The strategy's per-round wall-clock cutoff, if it owns one.
+
+        ``scheduler.Deadline(tau=None)`` reads this, so e.g. ``FedTau``'s
+        tau and the virtual clock's round cutoff are ONE knob: the same
+        seconds that budget each client's local steps also decide who the
+        scheduler drops.  None = no deadline (a bare ``Deadline()`` then
+        degenerates to ``SyncAll``).
+        """
+        return None
 
     def codec_for_client(self, client_id: int, properties=None):
         """Per-device codec selection (None = raw pytree transport)."""
@@ -134,9 +154,7 @@ class Strategy:
         densify per client.  Server state (FedOpt moments) is carried
         across rounds on both paths.
         """
-        weights = jnp.asarray(
-            [float(r.num_examples) for _, r in results], jnp.float32
-        )
+        weights = self._fit_weights(results)
         if float(jnp.sum(weights)) == 0.0:
             # every sampled client reported zero examples: fall back to an
             # unweighted mean instead of poisoning the global with NaNs
@@ -158,6 +176,14 @@ class Strategy:
         self._server_state = new_state
         return new_global
 
+    def _fit_weights(self, results: list[tuple[int, "FitRes"]]) -> jnp.ndarray:
+        """Per-result aggregation weights (the ONE hook both the grouped
+        wire reduce and the densify path flow through).  Default: example
+        counts; ``FedBuffStrategy`` discounts by staleness here."""
+        return jnp.asarray(
+            [float(r.num_examples) for _, r in results], jnp.float32
+        )
+
     def _grouped_fit_compatible(self) -> bool:
         """The grouped wire reduce computes weighted-mean + ``server_update``;
         that composition is only known to equal ``aggregate`` for the
@@ -167,12 +193,16 @@ class Strategy:
         back to the densify path — identity checks on the class attributes,
         so overrides anywhere in the MRO disqualify."""
         from .fedavg import FedAvg
+        from .fedbuff import FedBuffStrategy
         from .fedopt import FedOpt
         from .fedprox import FedProx
         from .fedtau import FedTau
 
         cls = type(self)
-        if cls.aggregate in (FedAvg.aggregate, FedProx.aggregate, FedTau.aggregate):
+        if cls.aggregate in (
+            FedAvg.aggregate, FedProx.aggregate, FedTau.aggregate,
+            FedBuffStrategy.aggregate,
+        ):
             return cls.server_update is Strategy.server_update
         if cls.aggregate is FedOpt.aggregate:
             return cls.server_update is FedOpt.server_update

@@ -1,0 +1,78 @@
+"""FedBuff (Nguyen et al., 2022): buffered asynchronous aggregation.
+
+The canonical cost-driven FL design the virtual-clock layer exists for:
+instead of the round ending when the *slowest* client reports (SyncAll) or
+at a hard cutoff (Deadline), the server aggregates as soon as a buffer of
+K updates has arrived — stragglers keep computing and their updates land
+in a LATER aggregation, discounted by how stale they are.
+
+Split of responsibilities (the staleness-weight contract,
+core/scheduler.py):
+
+- ``scheduler.BufferedAsync(K, max_staleness)`` owns the *timing*: which
+  arrivals each round consumes, who stays in flight, who expires.
+- this Strategy owns the *weighting*: a reported update with staleness
+  ``s`` (rounds elapsed since its client pulled the global it trained
+  from) aggregates at ``w_c / (1 + s)**alpha`` — fresh updates keep their
+  example-count weight, stale ones fade polynomially (``alpha=0`` recovers
+  plain FedAvg weighting; Nguyen et al.'s ``1/sqrt(1+s)`` is
+  ``alpha=0.5``, the default).
+
+The discount flows through ``Strategy._fit_weights``, so both aggregation
+paths — the grouped compressed-wire kernel reduce (``_aggregate_fit_wire``)
+and the per-client densify fallback — apply the same staleness weights; a
+mixed Pixel→TopK / Jetson→Int8 / TPU→Null fleet aggregates its stale
+updates without ever materializing per-client dense params.  Stale deltas
+apply to the CURRENT global (the wire formats ship deltas; the Server
+rebases raw-parameter payloads), which is exactly FedBuff's update rule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .base import Strategy, weighted_mean
+
+
+@dataclass
+class FedBuffStrategy(Strategy):
+    name: str = "fedbuff"
+    local_epochs: int = 1
+    local_lr: float = 0.05
+    alpha: float = 0.5          # staleness-discount exponent
+    buffer_size: int = 2        # K — mirrored into make_policy()
+    max_staleness: int = 4      # older arrivals are expired by the policy
+
+    def fit_config(self, rnd: int, client_id: int) -> dict:
+        return {"epochs": self.local_epochs, "lr": self.local_lr}
+
+    def make_policy(self):
+        """The matching scheduler policy: ONE place owns K/max_staleness."""
+        from ..scheduler import BufferedAsync
+
+        return BufferedAsync(
+            buffer_size=self.buffer_size, max_staleness=self.max_staleness
+        )
+
+    def staleness_weight(self, staleness) -> float:
+        return 1.0 / (1.0 + float(staleness)) ** self.alpha
+
+    def _fit_weights(self, results) -> jnp.ndarray:
+        """Example-count weights discounted by each result's staleness.
+
+        The Server stamps ``FitRes.staleness`` from the scheduler's verdict
+        (0 = trained on this round's global); results that never went
+        through the scheduler aggregate undiscounted.
+        """
+        return jnp.asarray(
+            [
+                float(r.num_examples)
+                * self.staleness_weight(getattr(r, "staleness", 0))
+                for _, r in results
+            ],
+            jnp.float32,
+        )
+
+    def aggregate(self, client_params, weights, global_params, server_state, rnd):
+        return weighted_mean(client_params, weights), server_state

@@ -33,6 +33,17 @@ class FedTau(Strategy):
     steps_per_epoch: int = 10
     weight_by_steps: bool = False         # weight updates by completed steps
 
+    def round_deadline_s(self) -> float | None:
+        """tau IS the scheduler's deadline: ``scheduler.Deadline(tau=None)``
+        cuts the virtual round at the same instant that budgets the local
+        steps.  The server-side ``max_steps`` budget is compute-only, so a
+        client that fills it can still miss the cutoff on comm time; the
+        ``deadline_s`` that ``configure_fit`` ships alongside lets clients
+        with known profiles subtract their own transfer time (JaxClient
+        does).  Drops remain possible for jittered step times or clients
+        that don't know their links — which is the point of measuring."""
+        return self.tau_s if self.tau_s > 0 else None
+
     def fit_config(self, rnd: int, client_id: int) -> dict:
         cfg = {"epochs": self.local_epochs, "lr": self.local_lr, "tau_s": self.tau_s}
         if self.cost_model is not None:

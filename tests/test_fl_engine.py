@@ -637,3 +637,54 @@ def test_flatten_unflatten_inverse(seed):
         np.testing.assert_allclose(
             np.asarray(x, np.float32), np.asarray(y, np.float32), atol=1e-2
         )
+
+
+# ---------------- History convergence-time accounting ----------------
+def _rec(rnd, wall, acc=None):
+    from repro.core.server import RoundRecord
+
+    return RoundRecord(rnd=rnd, train_loss=1.0, eval_loss=None, eval_acc=acc,
+                       wall_time_s=wall, energy_j=0.0, comm_bytes=0, steps=1)
+
+
+def test_history_no_eval_rounds():
+    """eval_every > num_rounds: no accuracy exists anywhere."""
+    from repro.core.server import History
+
+    h = History()
+    h.add(_rec(1, 10.0))
+    h.add(_rec(2, 5.0))
+    assert h.accuracy_series() == []
+    assert h.final_accuracy() is None
+    assert h.time_to_accuracy(0.1) is None
+    assert h.total_time_s == 15.0
+
+
+def test_history_target_never_reached():
+    from repro.core.server import History
+
+    h = History()
+    h.add(_rec(1, 10.0, acc=0.2))
+    h.add(_rec(2, 5.0, acc=0.4))
+    assert h.time_to_accuracy(0.5) is None
+    # the crossing round's wall time counts toward the convergence time,
+    # and non-eval rounds before it count too
+    h.add(_rec(3, 2.0))           # no eval this round
+    h.add(_rec(4, 3.0, acc=0.6))
+    assert h.time_to_accuracy(0.5) == pytest.approx(20.0)
+    assert h.time_to_accuracy(0.4) == pytest.approx(15.0)  # earlier crossing
+    assert h.final_accuracy() == 0.6
+    assert h.accuracy_series() == [(1, 0.2), (2, 0.4), (4, 0.6)]
+
+
+def test_history_first_round_hit_and_empty():
+    from repro.core.server import History
+
+    h = History()
+    h.add(_rec(1, 3.0, acc=0.9))
+    assert h.time_to_accuracy(0.5) == pytest.approx(3.0)
+    assert h.time_to_accuracy(0.9) == pytest.approx(3.0)  # >= is inclusive
+    empty = History()
+    assert empty.time_to_accuracy(0.0) is None
+    assert empty.final_accuracy() is None
+    assert empty.total_time_s == 0.0 and empty.total_energy_j == 0.0
