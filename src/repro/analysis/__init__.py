@@ -1,0 +1,30 @@
+"""fedlint — JAX/Pallas-aware static analysis for the FL round engine.
+
+Stdlib-only (never imports jax): it must run where the runtime cannot.
+
+    python -m repro.analysis src/repro            # text report, exit != 0
+    python -m repro.analysis --format=json --out fedlint.json src/repro
+    python -m repro.analysis --check-baseline src/repro
+
+See README.md in this package for the rule catalogue.
+"""
+from __future__ import annotations
+
+from .core import Finding, Project, load_baseline, split_baseline
+from .rules import ALL_RULES, RULES_BY_NAME
+
+
+def run(paths, rules=None) -> list[Finding]:
+    """Analyze paths with the given rules (default: all). Sorted output."""
+    project = Project(paths)
+    findings: list[Finding] = []
+    for rule in rules or ALL_RULES:
+        findings.extend(rule.check(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.code))
+    return findings
+
+
+__all__ = [
+    "ALL_RULES", "Finding", "Project", "RULES_BY_NAME",
+    "load_baseline", "run", "split_baseline",
+]

@@ -1,0 +1,106 @@
+"""fedlint CLI.
+
+Exit codes: 0 clean (all findings baselined), 1 active findings,
+2 stale baseline entries under --check-baseline, 3 usage/parse errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import run
+from .core import load_baseline, split_baseline
+from .rules import RULES_BY_NAME
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="fedlint: static contracts of the FL round engine",
+    )
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to scan (default: src/repro)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this path")
+    ap.add_argument("--baseline", default="fedlint_baseline.json",
+                    help="suppression file (default: ./fedlint_baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report raw findings, ignore the baseline")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="also fail on stale (unmatched) baseline entries")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file with "
+                         "TODO reasons and exit 0")
+    ap.add_argument("--rule", action="append", default=None,
+                    choices=sorted(RULES_BY_NAME),
+                    help="run only these rules (repeatable)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src/repro"]
+    missing = [p for p in paths if not Path(p).exists()]
+    if missing:
+        print(f"fedlint: no such path: {', '.join(missing)}",
+              file=sys.stderr)
+        return 3
+
+    rules = [RULES_BY_NAME[r] for r in args.rule] if args.rule else None
+    findings = run(paths, rules)
+
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    active, suppressed, stale = split_baseline(findings, baseline)
+
+    if args.write_baseline:
+        payload = {
+            "comment": "fedlint suppressions — every entry needs a reason",
+            "suppressions": [
+                {"key": f.key, "reason": baseline.get(f.key, "TODO"),
+                 "message": f.message}
+                for f in findings
+            ],
+        }
+        Path(args.baseline).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"fedlint: wrote {len(findings)} entries to {args.baseline}")
+        return 0
+
+    report = {
+        "paths": paths,
+        "counts": {
+            "active": len(active), "suppressed": len(suppressed),
+            "stale_baseline": len(stale),
+        },
+        "findings": [f.to_dict() for f in active],
+        "suppressed": [
+            dict(f.to_dict(), reason=baseline[f.key]) for f in suppressed
+        ],
+        "stale_baseline": stale,
+    }
+    if args.out:
+        Path(args.out).write_text(json.dumps(report, indent=2) + "\n")
+
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        for f in active:
+            print(f"{f.path}:{f.line}: [{f.rule}/{f.code}] {f.func}: "
+                  f"{f.message}")
+        if suppressed:
+            print(f"# {len(suppressed)} finding(s) suppressed by "
+                  f"{args.baseline}")
+        for key in stale:
+            print(f"# stale baseline entry (no longer fires): {key}")
+        status = "clean" if not active else f"{len(active)} finding(s)"
+        print(f"fedlint: {status} "
+              f"({len(findings)} raw, {len(suppressed)} baselined)")
+
+    if active:
+        return 1
+    if args.check_baseline and stale:
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,480 @@
+"""fedlint core: AST project model shared by every rule.
+
+Stdlib-only by design — the analyzer must run (and fail CI) on machines
+where jax itself cannot import, so nothing here touches the runtime.
+
+The model is deliberately heuristic where Python is dynamic:
+
+- calls through bare names resolve lexically (enclosing-function closures,
+  then module scope, then ``from x import y`` aliases);
+- ``mod.fn(...)`` resolves precisely when ``mod`` is an imported project
+  module;
+- ``obj.meth(...)`` resolves to every project *method* of that name (class
+  dispatch is dynamic, so we over-approximate project-wide) and to nested
+  closure functions of that name in modules the caller imports (closures
+  travel inside objects like ``Optimizer(init, update)``, but only between
+  modules that can see each other).
+
+Findings carry a line-independent key ``rule:path:func:code`` so the
+baseline survives unrelated edits to the same file.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+# ---------------------------------------------------------------------------
+# findings + baseline
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    func: str          # lexical qualname within the module, or "<module>"
+    code: str          # stable short tag for the defect class
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.rule}:{self.path}:{self.func}:{self.code}"
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule, "path": self.path, "line": self.line,
+            "func": self.func, "code": self.code, "message": self.message,
+            "key": self.key,
+        }
+
+
+def load_baseline(path: str | Path) -> dict[str, str]:
+    """baseline JSON -> {finding key: reason}. Missing file -> empty."""
+    p = Path(path)
+    if not p.exists():
+        return {}
+    data = json.loads(p.read_text())
+    out: dict[str, str] = {}
+    for entry in data.get("suppressions", []):
+        out[entry["key"]] = entry.get("reason", "")
+    return out
+
+
+def split_baseline(
+    findings: list[Finding], baseline: dict[str, str]
+) -> tuple[list[Finding], list[Finding], list[str]]:
+    """-> (active, suppressed, stale_baseline_keys)."""
+    active, suppressed = [], []
+    hit: set[str] = set()
+    for f in findings:
+        if f.key in baseline:
+            suppressed.append(f)
+            hit.add(f.key)
+        else:
+            active.append(f)
+    stale = sorted(set(baseline) - hit)
+    return active, suppressed, stale
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+
+
+def attr_chain(node: ast.AST) -> list[str] | None:
+    """``a.b.c`` -> ["a", "b", "c"]; None if the chain has non-name parts."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def own_nodes(fnode: ast.AST):
+    """Walk a function's own body, not descending into nested def bodies
+    (nested defs are separate FunctionInfos).  Lambdas stay with the owner."""
+    stack = list(ast.iter_child_nodes(fnode))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def iter_calls(fnode: ast.AST):
+    for node in own_nodes(fnode):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def const_eval(node: ast.AST, env: dict[str, object]):
+    """Tiny static evaluator over ints/tuples: Name, Constant, +,-,*,//,%,
+    <<,>>, unary -, min/max, tuple literals.  None when unresolvable."""
+    if isinstance(node, ast.Constant):
+        return node.value if isinstance(node.value, (int, float)) else None
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.Tuple):
+        vals = [const_eval(e, env) for e in node.elts]
+        return None if any(v is None for v in vals) else tuple(vals)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_eval(node.operand, env)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        a, b = const_eval(node.left, env), const_eval(node.right, env)
+        if a is None or b is None or isinstance(a, tuple) or isinstance(b, tuple):
+            return None
+        try:
+            if isinstance(node.op, ast.Add):
+                return a + b
+            if isinstance(node.op, ast.Sub):
+                return a - b
+            if isinstance(node.op, ast.Mult):
+                return a * b
+            if isinstance(node.op, ast.FloorDiv):
+                return a // b
+            if isinstance(node.op, ast.Mod):
+                return a % b
+            if isinstance(node.op, ast.LShift):
+                return a << b
+            if isinstance(node.op, ast.RShift):
+                return a >> b
+            if isinstance(node.op, ast.Pow):
+                return a ** b
+        except (ZeroDivisionError, TypeError, ValueError):
+            return None
+        return None
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("min", "max") and not node.keywords:
+        vals = [const_eval(a, env) for a in node.args]
+        if any(v is None or isinstance(v, tuple) for v in vals) or not vals:
+            return None
+        return (min if node.func.id == "min" else max)(vals)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# project model
+
+
+@dataclass
+class FunctionInfo:
+    module: "ModuleInfo"
+    name: str
+    qualname: str
+    node: ast.AST
+    parent_class: str | None = None
+
+    def __hash__(self):
+        return hash((self.module.path, self.qualname))
+
+    def __eq__(self, other):
+        return (
+            isinstance(other, FunctionInfo)
+            and self.module.path == other.module.path
+            and self.qualname == other.qualname
+        )
+
+    def __repr__(self):
+        return f"<fn {self.module.dotted}:{self.qualname}>"
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    node: ast.ClassDef
+    bases: list[str] = field(default_factory=list)
+    methods: dict[str, FunctionInfo] = field(default_factory=dict)
+
+
+@dataclass
+class ModuleInfo:
+    path: str
+    dotted: str
+    tree: ast.Module
+    functions: dict[str, FunctionInfo] = field(default_factory=dict)
+    classes: dict[str, ClassInfo] = field(default_factory=dict)
+    # local name -> dotted module path (import x.y as z / from pkg import mod)
+    module_aliases: dict[str, str] = field(default_factory=dict)
+    # local name -> (dotted module, original name)   (from mod import name)
+    from_imports: dict[str, tuple[str, str]] = field(default_factory=dict)
+    consts: dict[str, object] = field(default_factory=dict)
+
+    def _roots(self, dotted_prefix: str) -> set[str]:
+        out = {
+            local for local, d in self.module_aliases.items()
+            if d == dotted_prefix or d.startswith(dotted_prefix + ".")
+        }
+        out |= {
+            local for local, (d, _) in self.from_imports.items()
+            if d == dotted_prefix or d.startswith(dotted_prefix + ".")
+        }
+        return out
+
+    @property
+    def numpy_aliases(self) -> set[str]:
+        return {
+            local for local, d in self.module_aliases.items()
+            if d == "numpy" or d.startswith("numpy.")
+        }
+
+    @property
+    def jnp_aliases(self) -> set[str]:
+        return {
+            local for local, d in self.module_aliases.items()
+            if d == "jax.numpy"
+        }
+
+    @property
+    def jax_aliases(self) -> set[str]:
+        return {
+            local for local, d in self.module_aliases.items() if d == "jax"
+        }
+
+
+def _module_dotted(path: Path) -> str:
+    parts = list(path.with_suffix("").parts)
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    for anchor in ("src",):
+        if anchor in parts:
+            parts = parts[parts.index(anchor) + 1:]
+            break
+    else:
+        if "repro" in parts:
+            parts = parts[parts.index("repro"):]
+    return ".".join(parts) if parts else path.stem
+
+
+class _Indexer(ast.NodeVisitor):
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.stack: list[str] = []
+        self.class_stack: list[str] = []
+
+    def _register_function(self, node):
+        # several siblings may share a name (e.g. one nested `round_step`
+        # per execution mode) — dedupe so none of their bodies is lost
+        base = node.name
+        qual = ".".join(self.stack + [base])
+        k = 2
+        while qual in self.mod.functions:
+            base = f"{node.name}#{k}"
+            qual = ".".join(self.stack + [base])
+            k += 1
+        info = FunctionInfo(
+            module=self.mod, name=node.name, qualname=qual, node=node,
+            parent_class=self.class_stack[-1] if self.class_stack and
+            len(self.stack) and self.stack[-1] == self.class_stack[-1] else None,
+        )
+        self.mod.functions[qual] = info
+        if info.parent_class:
+            self.mod.classes[info.parent_class].methods[node.name] = info
+        self.stack.append(base)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _register_function
+    visit_AsyncFunctionDef = _register_function
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        bases = []
+        for b in node.bases:
+            chain = attr_chain(b)
+            if chain:
+                bases.append(chain[-1])
+        self.mod.classes[node.name] = ClassInfo(node.name, node, bases)
+        self.stack.append(node.name)
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+        self.stack.pop()
+
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            local = alias.asname or alias.name.split(".")[0]
+            dotted = alias.name if alias.asname else alias.name.split(".")[0]
+            self.mod.module_aliases[local] = dotted
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.level:  # relative: resolve against this module's package
+            pkg_parts = self.mod.dotted.split(".")
+            # drop the module leaf, then (level - 1) more packages
+            pkg_parts = pkg_parts[: max(0, len(pkg_parts) - node.level)]
+            base = ".".join(pkg_parts + ([node.module] if node.module else []))
+        else:
+            base = node.module or ""
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            local = alias.asname or alias.name
+            self.mod.from_imports[local] = (base, alias.name)
+
+
+class Project:
+    def __init__(self, paths: list[str | Path]):
+        self.modules: dict[str, ModuleInfo] = {}       # path -> info
+        self.by_dotted: dict[str, ModuleInfo] = {}
+        self.methods_by_name: dict[str, list[FunctionInfo]] = {}
+        self.nested_by_name: dict[str, list[FunctionInfo]] = {}
+        self.errors: list[str] = []
+        for p in self._expand(paths):
+            self._load(p)
+        self._index()
+
+    @staticmethod
+    def _expand(paths) -> list[Path]:
+        out: list[Path] = []
+        for p in paths:
+            p = Path(p)
+            if p.is_dir():
+                out.extend(sorted(p.rglob("*.py")))
+            elif p.suffix == ".py":
+                out.append(p)
+        return out
+
+    @staticmethod
+    def _rel(path: Path) -> str:
+        try:
+            return path.resolve().relative_to(Path.cwd().resolve()).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def _load(self, path: Path):
+        rel = self._rel(path)
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError as e:  # pragma: no cover - scanned trees parse
+            self.errors.append(f"{rel}: {e}")
+            return
+        mod = ModuleInfo(path=rel, dotted=_module_dotted(Path(rel)), tree=tree)
+        _Indexer(mod).visit(tree)
+        for stmt in tree.body:
+            targets = []
+            if isinstance(stmt, ast.Assign):
+                targets = [
+                    t.id for t in stmt.targets if isinstance(t, ast.Name)
+                ]
+                value = stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                    and isinstance(stmt.target, ast.Name):
+                targets, value = [stmt.target.id], stmt.value
+            else:
+                continue
+            v = const_eval(value, mod.consts)
+            if v is not None:
+                for t in targets:
+                    mod.consts[t] = v
+        self.modules[rel] = mod
+        self.by_dotted[mod.dotted] = mod
+
+    def _index(self):
+        for mod in self.modules.values():
+            for fn in mod.functions.values():
+                if fn.parent_class:
+                    self.methods_by_name.setdefault(fn.name, []).append(fn)
+                elif "." in fn.qualname:
+                    self.nested_by_name.setdefault(fn.name, []).append(fn)
+
+    # -- resolution --------------------------------------------------------
+
+    def _visible_modules(self, mod: ModuleInfo) -> set[str]:
+        """Paths of project modules this module imports (plus itself)."""
+        vis = {mod.path}
+        for dotted in mod.module_aliases.values():
+            m = self.by_dotted.get(dotted)
+            if m:
+                vis.add(m.path)
+        for dotted, name in mod.from_imports.values():
+            for cand in (f"{dotted}.{name}", dotted):
+                m = self.by_dotted.get(cand)
+                if m:
+                    vis.add(m.path)
+        return vis
+
+    def aliased_module(self, mod: ModuleInfo, local: str) -> ModuleInfo | None:
+        """Project module a local name refers to (import x / from pkg
+        import mod), else None."""
+        if local in mod.module_aliases:
+            return self.by_dotted.get(mod.module_aliases[local])
+        if local in mod.from_imports:
+            dotted, orig = mod.from_imports[local]
+            return self.by_dotted.get(f"{dotted}.{orig}" if dotted else orig)
+        return None
+
+    def module_level_function(self, dotted: str, name: str) -> FunctionInfo | None:
+        m = self.by_dotted.get(dotted)
+        if m is None:
+            return None
+        fn = m.functions.get(name)
+        if fn is not None and "." not in fn.qualname:
+            return fn
+        return None
+
+    def resolve_call(self, caller: FunctionInfo, call: ast.Call) -> list[FunctionInfo]:
+        mod = caller.module
+        callee = call.func
+        out: list[FunctionInfo] = []
+        if isinstance(callee, ast.Name):
+            n = callee.id
+            parts = caller.qualname.split(".")
+            for i in range(len(parts), -1, -1):
+                qual = ".".join(parts[:i] + [n])
+                if qual in mod.functions:
+                    return [mod.functions[qual]]
+            if n in mod.from_imports:
+                dotted, orig = mod.from_imports[n]
+                fn = self.module_level_function(dotted, orig)
+                if fn:
+                    return [fn]
+            return []
+        if isinstance(callee, ast.Attribute):
+            chain = attr_chain(callee)
+            target = chain and self.aliased_module(mod, chain[0])
+            if target:
+                if len(chain) == 2:
+                    fn = target.functions.get(chain[1])
+                    if fn and "." not in fn.qualname:
+                        return [fn]
+                return []
+            # dynamic attribute dispatch: project methods of this name
+            # anywhere, closures of this name in modules the caller imports
+            name = callee.attr
+            out.extend(self.methods_by_name.get(name, []))
+            vis = self._visible_modules(mod)
+            out.extend(
+                f for f in self.nested_by_name.get(name, [])
+                if f.module.path in vis
+            )
+        return out
+
+    # -- reachability ------------------------------------------------------
+
+    def lexical_children(self, fn: FunctionInfo) -> list[FunctionInfo]:
+        prefix = fn.qualname + "."
+        return [
+            f for f in fn.module.functions.values()
+            if f.qualname.startswith(prefix)
+        ]
+
+    def reachable_from(self, root_names: tuple[str, ...]) -> set[FunctionInfo]:
+        roots = [
+            fn for mod in self.modules.values()
+            for fn in mod.functions.values()
+            if fn.name in root_names and "." not in fn.qualname
+        ]
+        seen: set[FunctionInfo] = set()
+        frontier = list(roots)
+        while frontier:
+            fn = frontier.pop()
+            if fn in seen:
+                continue
+            seen.add(fn)
+            frontier.extend(self.lexical_children(fn))
+            for call in iter_calls(fn.node):
+                frontier.extend(self.resolve_call(fn, call))
+        return seen

@@ -1,0 +1,22 @@
+"""fedlint rule registry."""
+from __future__ import annotations
+
+from . import (
+    jit_host_sync,
+    mask_nan,
+    pallas_vmem,
+    recompile_hazard,
+    rng_discipline,
+    wire_accounting,
+)
+
+ALL_RULES = (
+    jit_host_sync,
+    rng_discipline,
+    recompile_hazard,
+    pallas_vmem,
+    mask_nan,
+    wire_accounting,
+)
+
+RULES_BY_NAME = {r.NAME: r for r in ALL_RULES}

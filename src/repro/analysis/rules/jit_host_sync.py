@@ -1,0 +1,130 @@
+"""Rule 1: jit-host-sync — no host synchronization inside traced bodies.
+
+Builds the reachability graph rooted at every ``make_round_step`` /
+``make_client_update`` (the functions whose returned closures are jitted)
+and flags, in any reachable function:
+
+- ``.item()`` / ``.block_until_ready()``   (forces a device sync)
+- ``float(...)`` / ``int(...)``            (concretizes a tracer)
+- ``np.*`` calls                           (host numpy inside the trace)
+- ``print(...)``                           (traces once, then lies)
+
+numpy on trace-time-static data (shapes, codec assignments) is legitimate;
+those few functions are suppressed via the baseline with a reason, which is
+the point — the exemption is recorded, not folklore.
+
+Also hosts the module-scope import-scan: calls at module import time that
+touch the device (``jax.devices()``, ``jax.device_put``, any ``jnp.*`` /
+``jax.random.*`` call) break ``pytest`` collection on machines without the
+backend, so they are flagged as ``module-scope-device-call``.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding, Project, attr_chain, own_nodes
+
+NAME = "jit-host-sync"
+ROOTS = ("make_round_step", "make_client_update")
+SYNC_ATTRS = {"item": "item", "block_until_ready": "block-until-ready"}
+DEVICE_CALLS = {
+    "devices", "local_devices", "device_count", "local_device_count",
+    "default_backend", "device_put", "device_get",
+}
+
+
+def _np_root(node: ast.AST, np_aliases: set[str]) -> str | None:
+    chain = attr_chain(node)
+    if chain and chain[0] in np_aliases and len(chain) > 1:
+        return ".".join(chain)
+    return None
+
+
+def _contains_np_call(node: ast.AST, np_aliases: set[str]) -> bool:
+    return any(
+        isinstance(n, ast.Call) and _np_root(n.func, np_aliases)
+        for n in ast.walk(node)
+    )
+
+
+def check(project: Project) -> list[Finding]:
+    findings = list(_import_scan(project))
+    reachable = project.reachable_from(ROOTS)
+    for fn in sorted(reachable, key=lambda f: (f.module.path, f.qualname)):
+        mod = fn.module
+        np_aliases = mod.numpy_aliases
+        np_calls: list[tuple[int, str]] = []
+        for node in own_nodes(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            root = _np_root(node.func, np_aliases)
+            if root:
+                np_calls.append((node.lineno, root))
+                continue
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in SYNC_ATTRS:
+                findings.append(Finding(
+                    NAME, mod.path, node.lineno, fn.qualname,
+                    SYNC_ATTRS[node.func.attr],
+                    f".{node.func.attr}() in a traced body forces a "
+                    "host-device sync",
+                ))
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int") and node.args:
+                # int(np.prod(...)) is the static-shape idiom: fold it into
+                # the per-function np finding instead of double-reporting
+                if not _contains_np_call(node.args[0], np_aliases):
+                    findings.append(Finding(
+                        NAME, mod.path, node.lineno, fn.qualname, "py-cast",
+                        f"{node.func.id}() on a traced value concretizes "
+                        "it (host sync + constant-folds into the trace)",
+                    ))
+            elif isinstance(node.func, ast.Name) and node.func.id == "print":
+                findings.append(Finding(
+                    NAME, mod.path, node.lineno, fn.qualname, "print",
+                    "print() in a traced body runs at trace time only",
+                ))
+        if np_calls:
+            first = min(ln for ln, _ in np_calls)
+            names = sorted({n for _, n in np_calls})
+            findings.append(Finding(
+                NAME, mod.path, first, fn.qualname, "np-call",
+                "host numpy inside a jit-reachable function: "
+                + ", ".join(names)
+                + " (fine on trace-time-static data — baseline it with the "
+                "reason; otherwise use jnp)",
+            ))
+    return findings
+
+
+def _import_scan(project: Project):
+    """Module-scope statements must not touch the device."""
+    for mod in project.modules.values():
+        jax_roots = mod.jax_aliases
+        jnp_roots = mod.jnp_aliases
+        if not jax_roots and not jnp_roots:
+            continue
+        for stmt in mod.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = attr_chain(node.func)
+                if not chain or len(chain) < 2:
+                    continue
+                bad = (
+                    (chain[0] in jax_roots and chain[-1] in DEVICE_CALLS)
+                    or (chain[0] in jnp_roots)
+                    or (chain[0] in jax_roots and len(chain) >= 3
+                        and chain[1] in ("numpy", "random"))
+                )
+                if bad:
+                    yield Finding(
+                        NAME, mod.path, node.lineno, "<module>",
+                        "module-scope-device-call",
+                        f"{'.'.join(chain)}() at import time initializes the "
+                        "backend; pytest collection on backend-less machines "
+                        "dies here — defer it into a function",
+                    )

@@ -1,0 +1,139 @@
+"""Rule 5: mask-nan-safety — reductions in mask-carrying paths use where=.
+
+When a function carries a client-participation mask (a parameter or local
+whose name looks like ``mask`` / ``mask_c`` / ``mf``), the unselected lanes
+hold garbage (NaN-poisoned losses of clients that never ran).  A bare
+``jnp.mean / sum / max / min`` over metric arrays then leaks that garbage
+into the aggregate — the PR 5 NaN-poisoning class.
+
+A reduction in such a function is flagged unless one of:
+
+- it passes ``where=``;
+- its argument contains ``jnp.where(...)`` (already sanitized inline);
+- its argument references a *sanitized* local (assigned from an expression
+  containing ``jnp.where`` or another sanitized name — sanitization
+  propagates through arithmetic);
+- its argument references the mask itself (mask arithmetic like
+  ``jnp.sum(w * mf)`` is the guard, not the leak);
+- it sits in the ``mask is None`` arm of an ``if`` (the unmasked path).
+
+Pytree-leaf masks (``trainable_mask`` — which leaves train, not which
+clients exist) do not make a function mask-carrying.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from ..core import Finding, Project, attr_chain, own_nodes
+
+NAME = "mask-nan-safety"
+REDUCTIONS = {"mean", "sum", "max", "min", "average"}
+MASK_RE = re.compile(r"^(mask|mf)(_\w+)?$|_mask$")
+EXEMPT_RE = re.compile(r"trainable|tree|leaf")
+
+
+def _mask_names(fnode) -> set[str]:
+    names = {
+        a.arg for a in (
+            fnode.args.posonlyargs + fnode.args.args + fnode.args.kwonlyargs
+        )
+    }
+    for node in own_nodes(fnode):
+        if isinstance(node, ast.Assign):
+            names.update(
+                t.id for t in node.targets if isinstance(t, ast.Name)
+            )
+    return {
+        n for n in names if MASK_RE.search(n) and not EXEMPT_RE.search(n)
+    }
+
+
+def _none_zones(fnode, masks: set[str]) -> list[tuple[int, int]]:
+    """Line spans of the unmasked arms: `if m is None:` body / the orelse
+    of `if m is not None:`."""
+    zones = []
+    for node in own_nodes(fnode):
+        if not isinstance(node, ast.If):
+            continue
+        t = node.test
+        if isinstance(t, ast.Compare) and len(t.ops) == 1 \
+                and isinstance(t.left, ast.Name) and t.left.id in masks \
+                and isinstance(t.comparators[0], ast.Constant) \
+                and t.comparators[0].value is None:
+            arm = node.body if isinstance(t.ops[0], ast.Is) else node.orelse
+            if arm:
+                end = max(
+                    getattr(s, "end_lineno", s.lineno) for s in arm
+                )
+                zones.append((arm[0].lineno, end))
+    return zones
+
+
+def _mentions(node: ast.AST, names: set[str]) -> bool:
+    return any(
+        isinstance(n, ast.Name) and n.id in names for n in ast.walk(node)
+    )
+
+
+def _has_jnp_where(node: ast.AST, jnp: set[str]) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            chain = attr_chain(n.func)
+            if chain and chain[0] in jnp and chain[-1] == "where":
+                return True
+    return False
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules.values():
+        jnp = mod.jnp_aliases
+        if not jnp:
+            continue
+        for fn in mod.functions.values():
+            masks = _mask_names(fn.node)
+            if not masks:
+                continue
+            zones = _none_zones(fn.node, masks)
+            sanitized: set[str] = set()
+            # single line-ordered pass: propagate sanitization, flag leaks
+            events = sorted(
+                (
+                    (n.lineno, i, n)
+                    for i, n in enumerate(own_nodes(fn.node))
+                    if isinstance(n, (ast.Assign, ast.Call))
+                ),
+                key=lambda t: t[:2],
+            )
+            for line, _, node in events:
+                if isinstance(node, ast.Assign):
+                    if _has_jnp_where(node.value, jnp) \
+                            or _mentions(node.value, sanitized | masks):
+                        sanitized.update(
+                            t.id for t in node.targets
+                            if isinstance(t, ast.Name)
+                        )
+                    continue
+                chain = attr_chain(node.func)
+                if not (chain and chain[0] in jnp
+                        and chain[-1] in REDUCTIONS):
+                    continue
+                if any(kw.arg == "where" for kw in node.keywords):
+                    continue
+                if any(lo <= line <= hi for lo, hi in zones):
+                    continue
+                if not node.args:
+                    continue
+                arg = node.args[0]
+                if _has_jnp_where(arg, jnp) \
+                        or _mentions(arg, sanitized | masks):
+                    continue
+                findings.append(Finding(
+                    NAME, mod.path, line, fn.qualname,
+                    f"unmasked-{chain[-1]}",
+                    f"jnp.{chain[-1]}() over {ast.unparse(arg)!r} in a "
+                    f"mask-carrying path (masks: {', '.join(sorted(masks))})"
+                    " without where= — unselected lanes poison the result",
+                ))
+    return findings

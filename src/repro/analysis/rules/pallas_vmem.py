@@ -1,0 +1,314 @@
+"""Rule 4: pallas-vmem-budget — every kernel declares and meets a VMEM ceiling.
+
+Each Pallas kernel file must carry a module constant ``VMEM_BUDGET_ELEMS``
+(fp32-equivalent elements; 1 elem = 4 bytes, so ``1 << 20`` = 4 MB of the
+~16 MB/core TPU VMEM).  The rule statically evaluates every
+``pl.pallas_call``'s resident footprint:
+
+    sum over BlockSpecs of  buffering_factor x prod(block_shape)
+    + sum over scratch_shapes of prod(shape)
+
+where buffering_factor is 2 for pipelined blocks (index_map depends on the
+grid position — Pallas double-buffers those) and 1 for grid-invariant
+blocks (e.g. an accumulator with ``lambda i: (0,)``) and scratch.  All
+elements are costed at 4 bytes: kernels upcast to fp32 in VMEM anyway, so
+int8 tiles are deliberately over-counted rather than under.
+
+Shapes come from a tiny const-evaluator over the dispatch function's body
+(module constants, parameter defaults, straight-line assignments).  Runtime
+dims the evaluator cannot see (C, N, head dim, ...) must be pinned by a
+module-level ``VMEM_ASSUMES = {"c": 1024, ...}`` dict — the kernel author's
+declared worst case, which this rule then audits the budget against.
+
+Findings:
+- ``missing-budget``: a pallas_call module without VMEM_BUDGET_ELEMS.
+- ``vmem-over-budget``: footprint under VMEM_ASSUMES exceeds the budget.
+- ``unresolved-block-shape``: a block dim neither evaluates nor appears in
+  VMEM_ASSUMES — the ceiling is unauditable, which is itself the defect.
+- ``no-oracle-fallback``: a kernel module none of whose importers also
+  reference the ``ref`` oracle module — no CPU/edge-case escape hatch.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding, Project, attr_chain, const_eval
+
+NAME = "pallas-vmem-budget"
+BUDGET_NAMES = ("VMEM_BUDGET_ELEMS", "VMEM_BUDGET_BYTES")
+
+
+def _pallas_aliases(mod) -> set[str]:
+    out = {
+        local for local, d in mod.module_aliases.items()
+        if d in ("jax.experimental.pallas", "pallas")
+    }
+    out |= {
+        local for local, (d, n) in mod.from_imports.items()
+        if n == "pallas" or (d, n) == ("jax.experimental", "pallas")
+    }
+    return out
+
+
+def _vmem_scratch_aliases(mod) -> set[str]:
+    return {
+        local for local, d in mod.module_aliases.items()
+        if d.endswith("pallas.tpu")
+    } | {
+        local for local, (d, n) in mod.from_imports.items()
+        if n == "tpu" and "pallas" in d
+    }
+
+
+def _assumes(mod) -> dict[str, int]:
+    for stmt in mod.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and stmt.targets[0].id == "VMEM_ASSUMES" \
+                and isinstance(stmt.value, ast.Dict):
+            out = {}
+            for k, v in zip(stmt.value.keys, stmt.value.values):
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    val = const_eval(v, mod.consts)
+                    if val is not None:
+                        out[k.value] = val
+            return out
+    return {}
+
+
+def _budget_elems(mod) -> int | None:
+    if "VMEM_BUDGET_ELEMS" in mod.consts:
+        return int(mod.consts["VMEM_BUDGET_ELEMS"])
+    if "VMEM_BUDGET_BYTES" in mod.consts:
+        return int(mod.consts["VMEM_BUDGET_BYTES"]) // 4
+    return None
+
+
+def _fn_env(fn, mod, assumes: dict[str, int], stop_line: int) -> dict:
+    """Constant environment at stop_line: module consts, param defaults,
+    then straight-line assignments (ASSUMES pins what won't evaluate)."""
+    env: dict[str, object] = dict(mod.consts)
+    env.update(assumes)
+    a = fn.node.args
+    pos = a.posonlyargs + a.args
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        v = const_eval(d, env)
+        if v is not None:
+            env[p.arg] = v
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            v = const_eval(d, env)
+            if v is not None:
+                env[p.arg] = v
+
+    def walk(stmts):
+        for stmt in stmts:
+            if stmt.lineno >= stop_line:
+                return
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                targets = (
+                    stmt.targets if isinstance(stmt, ast.Assign)
+                    else [stmt.target]
+                )
+                value = stmt.value
+                names = []
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        names.append(t.id)
+                    elif isinstance(t, ast.Tuple):
+                        names.extend(
+                            e.id for e in t.elts if isinstance(e, ast.Name)
+                        )
+                v = const_eval(value, env) if value is not None else None
+                if v is not None and len(names) == 1:
+                    env[names[0]] = v
+                else:
+                    for n in names:
+                        if n in assumes:
+                            env[n] = assumes[n]
+                        else:
+                            env.pop(n, None)
+            for attr in ("body", "orelse", "finalbody"):
+                walk(getattr(stmt, attr, []) or [])
+
+    walk(fn.node.body)
+    return env
+
+
+def _block_elems(shape_val) -> int | None:
+    if isinstance(shape_val, tuple):
+        n = 1
+        for d in shape_val:
+            if not isinstance(d, int):
+                return None
+            n *= d
+        return n
+    if isinstance(shape_val, int):
+        return shape_val
+    return None
+
+
+def _index_map_factor(spec_call: ast.Call) -> int:
+    """2 when the block pipelines across the grid (double-buffered)."""
+    index_map = spec_call.args[1] if len(spec_call.args) > 1 else None
+    for kw in spec_call.keywords:
+        if kw.arg == "index_map":
+            index_map = kw.value
+    if index_map is None or not isinstance(index_map, ast.Lambda):
+        return 2
+    params = {p.arg for p in index_map.args.args}
+    used = {
+        n.id for n in ast.walk(index_map.body) if isinstance(n, ast.Name)
+    }
+    return 2 if params & used else 1
+
+
+def _iter_specs(node):
+    """Flatten in_specs/out_specs values into BlockSpec call nodes."""
+    if isinstance(node, (ast.List, ast.Tuple)):
+        for e in node.elts:
+            yield from _iter_specs(e)
+    elif isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if chain and chain[-1] == "BlockSpec":
+            yield node
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    kernel_mods = []
+    for mod in project.modules.values():
+        pl_aliases = _pallas_aliases(mod)
+        if not pl_aliases:
+            continue
+        calls = []
+        for fn in mod.functions.values():
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Call):
+                    chain = attr_chain(node.func)
+                    if chain and chain[-1] == "pallas_call" \
+                            and chain[0] in pl_aliases:
+                        calls.append((fn, node))
+        if not calls:
+            continue
+        kernel_mods.append(mod)
+        budget = _budget_elems(mod)
+        if budget is None:
+            findings.append(Finding(
+                NAME, mod.path, 1, "<module>", "missing-budget",
+                "pallas_call module declares no VMEM_BUDGET_ELEMS — every "
+                "kernel file must carry an explicit VMEM ceiling (plus "
+                "VMEM_ASSUMES pinning its worst-case runtime dims)",
+            ))
+            continue
+        assumes = _assumes(mod)
+        for fn, call in calls:
+            findings.extend(
+                _check_call(mod, fn, call, budget, assumes)
+            )
+    findings.extend(_check_fallback(project, kernel_mods))
+    return findings
+
+
+def _check_call(mod, fn, call, budget, assumes):
+    env = _fn_env(fn, mod, assumes, call.lineno)
+    scratch_aliases = _vmem_scratch_aliases(mod)
+    total = 0
+    parts = []
+    unresolved = []
+    specs = []
+    for kw in call.keywords:
+        if kw.arg in ("in_specs", "out_specs"):
+            specs.extend(_iter_specs(kw.value))
+        elif kw.arg == "scratch_shapes" and isinstance(
+            kw.value, (ast.List, ast.Tuple)
+        ):
+            for e in kw.value.elts:
+                if isinstance(e, ast.Call):
+                    chain = attr_chain(e.func)
+                    if chain and chain[0] in scratch_aliases and e.args:
+                        v = _block_elems(const_eval(e.args[0], env))
+                        if v is None:
+                            unresolved.append(
+                                ast.unparse(e.args[0])
+                            )
+                        else:
+                            total += v
+                            parts.append(f"scratch {v}")
+    for spec in specs:
+        if not spec.args:
+            unresolved.append("BlockSpec()")
+            continue
+        v = _block_elems(const_eval(spec.args[0], env))
+        if v is None:
+            unresolved.append(ast.unparse(spec.args[0]))
+            continue
+        factor = _index_map_factor(spec)
+        total += factor * v
+        parts.append(f"{factor}x{v}")
+    if unresolved:
+        yield Finding(
+            NAME, mod.path, call.lineno, fn.qualname,
+            "unresolved-block-shape",
+            "block dims not statically evaluable and not pinned by "
+            "VMEM_ASSUMES: " + "; ".join(sorted(set(unresolved))),
+        )
+        return
+    if total > budget:
+        yield Finding(
+            NAME, mod.path, call.lineno, fn.qualname, "vmem-over-budget",
+            f"resident VMEM footprint {total} elems "
+            f"({total * 4 / 2**20:.1f} MB) exceeds VMEM_BUDGET_ELEMS="
+            f"{budget} under VMEM_ASSUMES={assumes} "
+            f"[blocks: {', '.join(parts)}]",
+        )
+
+
+def _relative_base(mod, node: ast.ImportFrom) -> str:
+    if node.level:
+        pkg = mod.dotted.split(".")
+        pkg = pkg[: max(0, len(pkg) - node.level)]
+        return ".".join(pkg + ([node.module] if node.module else []))
+    return node.module or ""
+
+
+def _check_fallback(project, kernel_mods):
+    """Every kernel module needs an importer that also calls the oracle."""
+    kernel_dotted = {m.dotted: m for m in kernel_mods}
+    covered: set[str] = set()
+    importers: dict[str, list] = {}
+    for mod in project.modules.values():
+        if mod.dotted in kernel_dotted:
+            continue
+        has_ref = any(
+            d == "ref" or d.endswith(".ref")
+            for d in mod.module_aliases.values()
+        ) or any(
+            (f"{d}.{n}" if d else n) == "ref"
+            or (f"{d}.{n}" if d else n).endswith(".ref")
+            for d, n in mod.from_imports.values()
+        )
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ImportFrom):
+                continue
+            base = _relative_base(mod, node)
+            hits = [base] + [f"{base}.{a.name}" for a in node.names]
+            for h in hits:
+                if h in kernel_dotted:
+                    importers.setdefault(h, []).append(mod)
+                    if has_ref:
+                        covered.add(h)
+    out = []
+    for dotted, mod in sorted(kernel_dotted.items()):
+        if dotted not in covered and importers.get(dotted):
+            out.append(Finding(
+                NAME, mod.path, 1, "<module>", "no-oracle-fallback",
+                f"kernel module {dotted} is dispatched from "
+                f"{', '.join(m.dotted for m in importers[dotted])} without "
+                "any reference to the ref oracle — no CPU / over-budget "
+                "escape hatch",
+            ))
+    return out

@@ -1,0 +1,231 @@
+"""Rule 3: recompile-hazard — jit signatures that retrace or fail to cache.
+
+For every jitted function (``@jax.jit``, ``@functools.partial(jax.jit,
+static_argnames=...)``, or ``f = jax.jit(g, ...)`` where ``g`` resolves):
+
+- ``unknown-static``: ``static_argnames`` names a parameter the function
+  does not have (silently ignored by jax -> the arg retraces every call).
+- ``unhashable-static``: a static parameter's default is a dict/list/set
+  literal — jit hashes static args, so the first call raises.
+- ``py-scalar-arg``: a call site passes a Python scalar literal to a
+  NON-static parameter.  Weak-typed scalars bake into the trace and every
+  distinct value recompiles.
+- ``container-arg``: a call site passes a dict/list literal to a
+  non-static parameter whose values are scalar literals (a pytree of
+  baked-in constants — same retrace-per-value hazard, spelled bigger).
+- ``varying-shape``: two call sites construct the same non-static
+  parameter with different literal shapes (``jnp.zeros((8,))`` vs
+  ``jnp.zeros((16,))``) — each shape is a separate compile; fine when
+  intended, a silent compile-storm when not.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from ..core import Finding, FunctionInfo, Project, attr_chain, iter_calls
+
+NAME = "recompile-hazard"
+SHAPE_CTORS = {"zeros", "ones", "full", "empty"}
+
+
+@dataclass
+class JitInfo:
+    fn: FunctionInfo
+    static: set[str]
+    line: int
+    # param name -> shape tuple -> first line seen (for varying-shape)
+    shapes: dict[str, dict[tuple, int]] = field(default_factory=dict)
+
+
+def _is_jax_jit(node: ast.AST, mod) -> bool:
+    chain = attr_chain(node)
+    if chain and chain[-1] == "jit":
+        if chain[0] in mod.jax_aliases or chain == ["jit"]:
+            return True
+        if mod.from_imports.get(chain[0], ("", ""))[0] == "jax":
+            return True
+    return False
+
+
+def _static_names(call: ast.Call) -> set[str]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            if kw.arg == "static_argnums":
+                return set()  # positional statics: out of scope
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {
+                    e.value for e in v.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                }
+    return set()
+
+
+def _partial_jit(call: ast.Call, mod) -> set[str] | None:
+    """functools.partial(jax.jit, static_argnames=...) -> static set."""
+    chain = attr_chain(call.func)
+    if not chain:
+        return None
+    is_partial = chain[-1] == "partial" and (
+        len(chain) == 1 or chain[0] in ("functools",)
+        or mod.from_imports.get(chain[0], ("", ""))[0] == "functools"
+    )
+    if is_partial and call.args and _is_jax_jit(call.args[0], mod):
+        return _static_names(call)
+    return None
+
+
+def _params(fnode) -> list[str]:
+    a = fnode.args
+    return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+def _collect_jitted(project: Project) -> dict[FunctionInfo, JitInfo]:
+    jitted: dict[FunctionInfo, JitInfo] = {}
+    for mod in project.modules.values():
+        for fn in mod.functions.values():
+            node = fn.node
+            for dec in getattr(node, "decorator_list", []):
+                static = None
+                if _is_jax_jit(dec, mod):
+                    static = set()
+                elif isinstance(dec, ast.Call):
+                    if _is_jax_jit(dec.func, mod):
+                        static = _static_names(dec)
+                    else:
+                        static = _partial_jit(dec, mod)
+                if static is not None:
+                    jitted[fn] = JitInfo(fn, static, dec.lineno)
+        # assignment form: f = jax.jit(g, static_argnames=...)
+        for owner in mod.functions.values():
+            for call in iter_calls(owner.node):
+                if not (isinstance(call.func, (ast.Attribute, ast.Name))
+                        and _is_jax_jit(call.func, mod)):
+                    continue
+                if call.args and isinstance(call.args[0], ast.Name):
+                    targets = project.resolve_call(
+                        owner, ast.Call(func=call.args[0], args=[], keywords=[])
+                    )
+                    for t in targets:
+                        jitted.setdefault(
+                            t, JitInfo(t, _static_names(call), call.lineno)
+                        )
+    return jitted
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    jitted = _collect_jitted(project)
+
+    for fn, info in jitted.items():
+        params = set(_params(fn.node))
+        for s in sorted(info.static - params):
+            findings.append(Finding(
+                NAME, fn.module.path, info.line, fn.qualname,
+                "unknown-static",
+                f"static_argnames names {s!r} but {fn.name}() has no such "
+                "parameter — jax ignores it and the arg retraces",
+            ))
+        a = fn.node.args
+        named = a.posonlyargs + a.args + a.kwonlyargs
+        defaults = dict(zip(
+            [p.arg for p in a.posonlyargs + a.args][-len(a.defaults):]
+            if a.defaults else [], a.defaults,
+        ))
+        defaults.update({
+            p.arg: d for p, d in zip(a.kwonlyargs, a.kw_defaults) if d
+        })
+        for p in named:
+            if p.arg in info.static and isinstance(
+                defaults.get(p.arg), (ast.Dict, ast.List, ast.Set)
+            ):
+                findings.append(Finding(
+                    NAME, fn.module.path, fn.node.lineno, fn.qualname,
+                    "unhashable-static",
+                    f"static parameter {p.arg!r} defaults to an unhashable "
+                    "container — jit hashes static args; this raises on "
+                    "first call",
+                ))
+
+    # call-site checks
+    for mod in project.modules.values():
+        for caller in mod.functions.values():
+            for call in iter_calls(caller.node):
+                for target in project.resolve_call(caller, call):
+                    info = jitted.get(target)
+                    if info is None:
+                        continue
+                    findings.extend(
+                        _check_site(mod, caller, call, target, info)
+                    )
+
+    # varying-shape: aggregated across sites per (fn, param)
+    for fn, info in jitted.items():
+        for pname, shapes in info.shapes.items():
+            if len(shapes) > 1:
+                desc = ", ".join(
+                    f"{s} (line {ln})" for s, ln in sorted(shapes.items())
+                )
+                findings.append(Finding(
+                    NAME, fn.module.path, min(shapes.values()), fn.qualname,
+                    "varying-shape",
+                    f"non-static parameter {pname!r} receives arrays of "
+                    f"different literal shapes: {desc} — each shape is a "
+                    "separate XLA compile",
+                ))
+    return findings
+
+
+def _literal_shape(node: ast.AST) -> tuple | None:
+    if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if chain and chain[-1] in SHAPE_CTORS and node.args:
+            shp = node.args[0]
+            if isinstance(shp, ast.Tuple) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in shp.elts
+            ):
+                return tuple(e.value for e in shp.elts)
+    return None
+
+
+def _check_site(mod, caller, call, target, info: JitInfo):
+    a = target.node.args
+    pos_params = [p.arg for p in a.posonlyargs + a.args]
+    bound: list[tuple[str, ast.AST]] = []
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred) or i >= len(pos_params):
+            break
+        bound.append((pos_params[i], arg))
+    bound.extend((kw.arg, kw.value) for kw in call.keywords if kw.arg)
+    for pname, val in bound:
+        if pname in info.static:
+            continue
+        if isinstance(val, ast.Constant) and isinstance(
+            val.value, (int, float, bool)
+        ):
+            yield Finding(
+                NAME, mod.path, call.lineno, caller.qualname,
+                "py-scalar-arg",
+                f"Python scalar {val.value!r} passed to non-static "
+                f"parameter {pname!r} of jitted {target.name}() — it bakes "
+                "into the trace; every distinct value recompiles (make it "
+                "static or pass an array)",
+            )
+        elif isinstance(val, (ast.Dict, ast.List)) and any(
+            isinstance(e, ast.Constant) and isinstance(e.value, (int, float))
+            for e in (val.values if isinstance(val, ast.Dict) else val.elts)
+        ):
+            yield Finding(
+                NAME, mod.path, call.lineno, caller.qualname,
+                "container-arg",
+                f"literal container of Python scalars passed to non-static "
+                f"parameter {pname!r} of jitted {target.name}() — a pytree "
+                "of baked-in constants retraces per value",
+            )
+        shp = _literal_shape(val)
+        if shp is not None:
+            info.shapes.setdefault(pname, {}).setdefault(shp, call.lineno)

@@ -1,0 +1,181 @@
+"""Rule 2: rng-discipline — seeds compose as tuples, keys split before reuse.
+
+Three defect classes:
+
+- ``additive-seed``: ``default_rng(seed * 1000 + rnd)`` (or any seed
+  expression arithmetically combining >= 2 variables).  Affine maps
+  collide: seed k+1 round r replays seed k round r+1000, silently
+  correlating "independent" runs.  numpy accepts sequences — spell it
+  ``default_rng((seed, rnd))``.  PR 5 review round 3 fixed exactly this;
+  the rule makes the fix permanent.
+- ``round-only-seed``: ``default_rng(rnd)`` — a stream derived from the
+  round index alone ignores the experiment seed entirely, so every seed
+  produces the same data.
+- ``key-reuse``: the same ``jax.random`` key (name or constant-index
+  subscript like ``ks[0]``) fed to two sinks without an interleaving
+  ``split`` / reassignment — the second sink replays the first's stream.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding, Project, attr_chain, own_nodes
+
+NAME = "rng-discipline"
+SEED_SINKS_ARG0 = {"default_rng", "PRNGKey", "key"}
+SEED_KWARGS = {"seed"}
+# non-sinks: constructors take seeds (not keys), split/fold_in derive
+SPLITTERS = {"split", "fold_in", "clone", "key_data", "wrap_key_data",
+             "key", "PRNGKey"}
+
+
+def _var_leaves(node: ast.AST) -> set[str]:
+    """Distinct variable leaves of an expression; dotted attrs count once."""
+    out: set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute):
+            chain = attr_chain(n)
+            if chain:
+                out.add(".".join(chain))
+        elif isinstance(n, ast.Name):
+            out.add(n.id)
+    # a.b contributes both "a.b" and "a" via the inner Name; keep the dotted
+    pruned = {v for v in out if not any(
+        w != v and w.startswith(v + ".") for w in out
+    )}
+    return pruned
+
+
+def _seed_exprs(call: ast.Call) -> list[ast.AST]:
+    """Seed-position expressions of a call, if it is a seeding call."""
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        name = fn.attr
+        # bare ``.key`` is too common a name; require a *.random.key chain
+        if name == "key":
+            chain = attr_chain(fn)
+            if not chain or "random" not in chain[:-1]:
+                name = None
+    elif isinstance(fn, ast.Name) and fn.id in ("default_rng", "PRNGKey"):
+        name = fn.id
+    else:
+        name = None
+    out = []
+    if name in SEED_SINKS_ARG0 and call.args:
+        out.append(call.args[0])
+    if name == "fold_in" and len(call.args) >= 2:
+        out.append(call.args[1])
+    out.extend(
+        kw.value for kw in call.keywords if kw.arg in SEED_KWARGS
+    )
+    return out
+
+
+def _is_roundish(v: str) -> bool:
+    leaf = v.split(".")[-1].lower()
+    return leaf in ("rnd", "r", "round", "round_idx", "round_id") \
+        or "rnd" in leaf or "round" in leaf
+
+
+def _is_seedish(v: str) -> bool:
+    return "seed" in v.split(".")[-1].lower()
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in project.modules.values():
+        for fn in mod.functions.values():
+            findings.extend(_check_seeding(mod, fn))
+            findings.extend(_check_key_reuse(mod, fn))
+    return findings
+
+
+def _check_seeding(mod, fn):
+    for node in own_nodes(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        for expr in _seed_exprs(node):
+            if isinstance(expr, ast.BinOp):
+                leaves = _var_leaves(expr)
+                if len(leaves) >= 2:
+                    yield Finding(
+                        NAME, mod.path, node.lineno, fn.qualname,
+                        "additive-seed",
+                        "seed combines variables arithmetically ("
+                        + ", ".join(sorted(leaves))
+                        + "); affine seed maps collide across (seed, round) "
+                        "pairs — pass the tuple itself, e.g. "
+                        "default_rng((seed, rnd))",
+                    )
+                    continue
+            leaves = _var_leaves(expr)
+            if leaves and all(_is_roundish(v) for v in leaves) \
+                    and not any(_is_seedish(v) for v in leaves):
+                yield Finding(
+                    NAME, mod.path, node.lineno, fn.qualname,
+                    "round-only-seed",
+                    "stream seeded from the round index alone ("
+                    + ", ".join(sorted(leaves))
+                    + ") — every experiment seed replays identical data; "
+                    "seed with (experiment_seed, rnd)",
+                )
+
+
+def _key_id(node: ast.AST) -> str | None:
+    """Identity of a key expression: bare name or name[const-int]."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name) \
+            and isinstance(node.slice, ast.Constant) \
+            and isinstance(node.slice.value, int):
+        return f"{node.value.id}[{node.slice.value}]"
+    return None
+
+
+def _check_key_reuse(mod, fn):
+    jax_roots = mod.jax_aliases
+    if not jax_roots:
+        return
+    # line-ordered stream of events touching jax.random keys
+    uses: dict[str, list[int]] = {}
+    kills: dict[str, list[int]] = {}
+    for node in own_nodes(fn.node):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                kid = _key_id(t)
+                if kid:
+                    kills.setdefault(kid, []).append(node.lineno)
+                    # overwriting ks also retires every ks[i]
+                    if isinstance(t, ast.Name):
+                        kills.setdefault(t.id + "[", []).append(node.lineno)
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func)
+        if not chain or chain[0] not in jax_roots or "random" not in chain:
+            continue
+        sink = chain[-1] not in SPLITTERS
+        for arg in node.args[:1]:  # the key is always the first argument
+            kid = _key_id(arg)
+            if kid is None:
+                continue
+            if sink:
+                uses.setdefault(kid, []).append(node.lineno)
+            else:
+                kills.setdefault(kid, []).append(node.lineno)
+    for kid, lines in uses.items():
+        if len(lines) < 2:
+            continue
+        lines = sorted(lines)
+        killed = sorted(
+            kills.get(kid, [])
+            + (kills.get(kid.split("[")[0] + "[", []) if "[" in kid else [])
+        )
+        for a, b in zip(lines, lines[1:]):
+            if not any(a < k <= b for k in killed):
+                yield Finding(
+                    NAME, mod.path, b, fn.qualname, "key-reuse",
+                    f"key {kid!r} consumed by two jax.random sinks "
+                    f"(lines {a} and {b}) without an interleaving split — "
+                    "the second sink replays the first's stream",
+                )
+                break

@@ -1,0 +1,67 @@
+"""Rule 6: wire-accounting — codecs that change the wire must re-cost it.
+
+The paper's entire argument runs through measured communication cost, so a
+codec whose ``encode``/``decode`` changes the wire format while inheriting
+the parent's ``wire_bytes`` silently mis-costs every experiment.
+
+A class is a codec when its (transitive, name-resolved) base chain contains
+a class that itself defines ``wire_bytes`` or ``_wire_bytes_scalar``.  If
+such a subclass overrides ``encode``/``decode``/``encode_batch``/
+``decode_batch`` but defines neither ``wire_bytes`` nor
+``_wire_bytes_scalar``, it is flagged.
+"""
+from __future__ import annotations
+
+from ..core import Finding, Project
+
+NAME = "wire-accounting"
+WIRE_METHODS = ("wire_bytes", "_wire_bytes_scalar")
+CODEC_METHODS = ("encode", "decode", "encode_batch", "decode_batch")
+
+
+def _class_index(project: Project):
+    idx = {}
+    for mod in project.modules.values():
+        for cls in mod.classes.values():
+            idx.setdefault(cls.name, []).append((mod, cls))
+    return idx
+
+
+def _defines_wire(cls) -> bool:
+    return any(m in cls.methods for m in WIRE_METHODS)
+
+
+def _ancestry_defines_wire(cls, idx, seen=None) -> bool:
+    """Any base (transitively, resolved by name project-wide) defines the
+    wire-accounting methods?"""
+    seen = seen or set()
+    for base in cls.bases:
+        if base in seen:
+            continue
+        seen.add(base)
+        for _, bcls in idx.get(base, []):
+            if _defines_wire(bcls) or _ancestry_defines_wire(
+                bcls, idx, seen
+            ):
+                return True
+    return False
+
+
+def check(project: Project) -> list[Finding]:
+    findings = []
+    idx = _class_index(project)
+    for mod in project.modules.values():
+        for cls in mod.classes.values():
+            if not _ancestry_defines_wire(cls, idx):
+                continue
+            overridden = [m for m in CODEC_METHODS if m in cls.methods]
+            if overridden and not _defines_wire(cls):
+                findings.append(Finding(
+                    NAME, mod.path, cls.node.lineno, cls.name,
+                    "wire-bytes-not-overridden",
+                    f"codec {cls.name} overrides "
+                    f"{'/'.join(overridden)} but inherits wire_bytes — "
+                    "the cost model will bill the parent's wire format; "
+                    "override wire_bytes or _wire_bytes_scalar",
+                ))
+    return findings

@@ -36,7 +36,8 @@ The O(C·k) TopK reduce contract
 - **When densify still applies**: ``decode_batch`` exists for callers that
   explicitly want the dense per-client matrix — nothing on any reduce path
   calls it.  The fused kernel additionally requires the (n_params,)
-  accumulator to fit VMEM; above ``scatter_reduce.VMEM_ELEMS`` the dispatch
+  accumulator to fit VMEM; above ``scatter_reduce.MAX_N_PARAMS`` (derived
+  from the kernel file's declared ``VMEM_BUDGET_ELEMS``) the dispatch
   falls back to the XLA scatter-add oracle, which is still O(C·k).
 
 Mixed-batch group semantics (``MixedCodec``)

@@ -35,7 +35,7 @@ def lm_round_batch(
     batch_size: int,
     seq_len: int,
     vocab_size: int,
-    seed: int,
+    seed,  # int or (experiment_seed, rnd) tuple — default_rng takes both
 ) -> dict[str, np.ndarray]:
     """Synthetic LM round batch (C, steps, B, seq) for the LLM-FL example."""
     from .synthetic import make_lm_tokens

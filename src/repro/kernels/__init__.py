@@ -3,5 +3,27 @@
 Each kernel has: <name>.py (pl.pallas_call + BlockSpec), an entry in ops.py
 (backend-dispatching jit wrapper) and an oracle in ref.py (pure jnp).  On
 this CPU container kernels are validated with interpret=True.
+
+Submodules load lazily (PEP 562): importing ``repro.kernels`` must not pull
+in jax — fedlint's import-scan gate (and pytest collection on machines
+without any accelerator backend) depends on module import staying inert.
 """
-from . import ops, ref
+from __future__ import annotations
+
+import importlib
+
+_SUBMODULES = (
+    "decode_attention", "dequant_reduce", "fedavg_reduce",
+    "flash_attention", "ops", "quantize", "ref", "scatter_reduce",
+    "selective_scan",
+)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SUBMODULES))

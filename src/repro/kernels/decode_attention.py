@@ -16,6 +16,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# Static VMEM ceiling audited by fedlint (pallas-vmem-budget), in fp32
+# elements: 256K elems = 1 MB — q/o hold G grouped heads, k/v stream in
+# bk-wide cache tiles, softmax state in scratch.
+VMEM_BUDGET_ELEMS = 1 << 18
+VMEM_ASSUMES = {"d": 256, "g": 16, "s": 1 << 14}
+
 
 def _decode_kernel(
     q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,

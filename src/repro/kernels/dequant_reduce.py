@@ -24,6 +24,14 @@ from repro.utils.pytree import safe_weight_sum
 
 BLOCK = 256
 
+# Static VMEM ceiling audited by fedlint (pallas-vmem-budget), in
+# fp32-equivalent elements (the int8 tile is costed at fp32 — the kernel
+# dequantizes it in VMEM anyway): 3M elems = 12 MB of ~16 MB/core.
+VMEM_BUDGET_ELEMS = 3 * (1 << 20)
+# Worst-case audited dims; the bn clamp below enforces the budget at
+# runtime for any cohort up to this C.
+VMEM_ASSUMES = {"c": 1024, "n": 1 << 22}
+
 
 def _dequant_reduce_kernel(q_ref, s_ref, w_ref, o_ref, *, block: int):
     q = q_ref[...].astype(jnp.float32)              # (C, bn)
@@ -52,6 +60,12 @@ def dequant_reduce(
     assert scales.shape == (c, n // block), scales.shape
     bn = min(bn, n)
     bn = max(block, (bn // block) * block)
+    # large-cohort clamp: double-buffered (C, bn) payload + (C, bn/block)
+    # scales + the (1, C) weight row + the (bn,) output tile must fit the
+    # budget: 2*C*bn + 2*C*bn/block + C + 2*bn <= VMEM_BUDGET_ELEMS
+    bn = max(block, min(
+        bn, (VMEM_BUDGET_ELEMS - c) // (2 * c + 2 * c // block + 2)
+    ) // block * block)
     pad = (-n) % bn
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad)))

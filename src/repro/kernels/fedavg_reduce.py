@@ -15,6 +15,14 @@ from jax.experimental import pallas as pl
 
 from repro.utils.pytree import safe_weight_sum
 
+# Static VMEM ceiling audited by fedlint (pallas-vmem-budget), in
+# fp32-equivalent elements: 3M elems = 12 MB of the ~16 MB/core VMEM.
+VMEM_BUDGET_ELEMS = 3 * (1 << 20)
+# Worst-case dims the audit pins: the cohort height of the (C, bn) tile
+# and the flat update length.  The bn clamp below keeps any C <= this
+# inside the budget at runtime.
+VMEM_ASSUMES = {"c": 1024, "n": 1 << 22}
+
 
 def _reduce_kernel(u_ref, w_ref, o_ref):
     u = u_ref[...].astype(jnp.float32)          # (C, bn)
@@ -34,6 +42,10 @@ def fedavg_reduce(updates, weights, *, bn: int = 8192, interpret: bool = False):
     """
     c, n = updates.shape
     bn = max(128, min(bn, n) // 128 * 128)  # lane-aligned tile width
+    # shrink the tile for large cohorts so the double-buffered (C, bn)
+    # update tiles + the (1, C) weight row + the (bn,) output stay inside
+    # the declared VMEM budget: 2*C*bn + 2*bn + C <= VMEM_BUDGET_ELEMS
+    bn = max(128, min(bn, (VMEM_BUDGET_ELEMS - c) // (2 * (c + 1))) // 128 * 128)
     pad = (-n) % bn
     if pad:
         updates = jnp.pad(updates, ((0, 0), (0, pad)))

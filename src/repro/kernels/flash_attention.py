@@ -18,6 +18,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# Static VMEM ceiling audited by fedlint (pallas-vmem-budget), in fp32
+# elements: 512K elems = 2 MB — double-buffered q/k/v/o tiles + the
+# (m, l, acc) online-softmax scratch at the worst-case head dim below.
+VMEM_BUDGET_ELEMS = 1 << 19
+VMEM_ASSUMES = {"d": 256, "sq": 1 << 14, "skv": 1 << 14}
+
 
 def _flash_kernel(
     q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,

@@ -148,9 +148,11 @@ def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret=False,
     global _TOPK_SPARSE_CALLS
     _TOPK_SPARSE_CALLS += 1
     if _use_pallas() or interpret:
-        from .scatter_reduce import VMEM_ELEMS, topk_scatter_reduce as sr
+        # the kernel file owns its VMEM budget; the dispatch gate is derived
+        # from it (fedlint audits that the two stay consistent)
+        from .scatter_reduce import MAX_N_PARAMS, topk_scatter_reduce as sr
 
-        if n_params <= VMEM_ELEMS:
+        if n_params <= MAX_N_PARAMS:
             out = sr(
                 idx, val, weights, n_params,
                 interpret=interpret or jax.default_backend() != "tpu",

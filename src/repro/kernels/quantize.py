@@ -14,6 +14,12 @@ from jax.experimental import pallas as pl
 
 BLOCK = 256
 
+# Static VMEM ceiling audited by fedlint (pallas-vmem-budget), in
+# fp32-equivalent elements (int8 tiles costed at fp32): 128K elems = 512 KB
+# — these are thin streaming kernels, far below the ~16 MB/core.
+VMEM_BUDGET_ELEMS = 1 << 17
+VMEM_ASSUMES = {"n": 1 << 22}
+
 
 def _quant_kernel(x_ref, q_ref, s_ref, *, block: int):
     x = x_ref[...].astype(jnp.float32)                  # (bn,)

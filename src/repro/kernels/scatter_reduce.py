@@ -32,8 +32,8 @@ Contract (mirrors ``ref.topk_scatter_reduce``):
   is sliced off (in-range indices never touch the pad).
 
 Fallback: the (N,) accumulator must fit in VMEM, so ``ops`` dispatches to
-the XLA scatter-add oracle above ``VMEM_ELEMS`` — still O(C·k), just not
-fused.  The only remaining densify path is ``TopKCodec.decode_batch``,
+the XLA scatter-add oracle above ``MAX_N_PARAMS`` (derived from this
+file's declared ``VMEM_BUDGET_ELEMS``) — still O(C·k), just not fused.  The only remaining densify path is ``TopKCodec.decode_batch``,
 which exists for callers that *want* the dense per-client matrix.
 """
 from __future__ import annotations
@@ -46,9 +46,24 @@ from jax.experimental import pallas as pl
 
 from repro.utils.pytree import safe_weight_sum
 
-# fp32 elements of the VMEM-resident output accumulator (~8 MB of the
-# ~16 MB/core budget, leaving room for the payload blocks)
-VMEM_ELEMS = 1 << 21
+# Static VMEM ceiling, audited by fedlint (pallas-vmem-budget): the
+# resident footprint of every pallas_call in this file — double-buffered
+# pipelined blocks, grid-invariant blocks, scratch — must stay under it.
+# Units are fp32-equivalent elements (4 bytes each): 3M elems = 12 MB of
+# the ~16 MB/core VMEM.
+VMEM_BUDGET_ELEMS = 3 * (1 << 20)
+
+# Worst-case runtime dims the budget is audited against (and that the
+# dispatch gate below enforces for n_params).
+K_MAX = 1 << 15       # TopK payload width (k = frac * N; 0.01 * 3M < 32768)
+C_MAX = 1 << 12       # cohort size of the (1, C) weight row
+# Largest dense accumulator the budget admits beside the payload blocks,
+# with 2x headroom on the payload: the ops dispatch falls back to the XLA
+# scatter-add oracle above this.
+MAX_N_PARAMS = (VMEM_BUDGET_ELEMS - 8 * K_MAX - 2 * C_MAX) // 128 * 128
+VMEM_ELEMS = MAX_N_PARAMS  # back-compat alias for older callers
+
+VMEM_ASSUMES = {"n_params": MAX_N_PARAMS, "k": K_MAX, "c": C_MAX}
 
 
 def _scatter_reduce_kernel(idx_ref, val_ref, w_ref, o_ref, *, k: int):

@@ -15,6 +15,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Static VMEM ceiling audited by fedlint (pallas-vmem-budget), in fp32
+# elements: 1M elems = 4 MB — chunked x/dt/B/C tiles, the (bd, N) state
+# scratch, and the double-buffered carry blocks at the dims below.
+VMEM_BUDGET_ELEMS = 1 << 20
+VMEM_ASSUMES = {"n": 64, "s": 1 << 13, "di": 1 << 12}
+
 
 def _scan_kernel(
     x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,

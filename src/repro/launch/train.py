@@ -86,11 +86,14 @@ def main() -> None:
         batch = lm_round_batch(
             n_clients=args.clients, steps=steps, batch_size=args.batch,
             seq_len=args.seq, vocab_size=cfg.vocab_size,
-            seed=args.seed * 1000 + rnd,
+            # tuple seeding (never seed*K+rnd arithmetic): affine seed maps
+            # collide across (seed, round) pairs, correlating "independent"
+            # runs — enforced by fedlint's rng-discipline rule
+            seed=(args.seed, rnd),
         )
         if cfg.frontend_tokens:
             fd = cfg.frontend_dim or cfg.d_model
-            rng = np.random.default_rng(rnd)
+            rng = np.random.default_rng((args.seed, rnd))
             batch["frontend"] = rng.normal(
                 size=(args.clients, steps, args.batch, cfg.frontend_tokens, fd)
             ).astype(np.float32)

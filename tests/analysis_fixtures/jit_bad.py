@@ -1,0 +1,27 @@
+"""jit-host-sync positive fixture: every host-sync pattern, plus a
+module-scope device call for the import-scan.  Never imported — only
+parsed by fedlint in tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.devices()  # module-scope-device-call: breaks backend-less collection
+
+
+def helper(x):
+    return float(jnp.sum(x))  # py-cast once reachable
+
+
+def stats(x):
+    return np.mean(np.asarray(x))  # np-call once reachable
+
+
+def make_round_step(loss_fn):
+    def round_step(params, batch):
+        loss = loss_fn(params, batch)
+        print("loss", loss)       # print: runs at trace time only
+        loss.item()               # item: host-device sync
+        loss.block_until_ready()  # block-until-ready
+        return helper(loss) + stats(loss)
+
+    return round_step

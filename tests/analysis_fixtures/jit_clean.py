@@ -1,0 +1,23 @@
+"""jit-host-sync negative fixture: pure-jnp traced bodies; host numpy and
+casts only in functions NOT reachable from the round step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def host_side_report(metrics):
+    # not reachable from make_round_step: python-side logging is fine
+    return {k: float(v) for k, v in metrics.items()}
+
+
+def tree_size(x):
+    # also unreachable here: static host accounting
+    return int(np.prod(x.shape))
+
+
+def make_round_step(loss_fn):
+    def round_step(params, batch):
+        loss = loss_fn(params, batch)
+        return jnp.mean(loss) / jnp.maximum(1.0, jnp.sum(loss * 0 + 1))
+
+    return round_step

@@ -1,0 +1,10 @@
+"""mask-nan-safety positive fixture: reductions that ignore the mask in
+scope.  With an all-dropped cohort these are the NaN/garbage paths."""
+import jax.numpy as jnp
+
+
+def masked_metrics(losses, weights, mask):
+    w_eff = weights * mask
+    total = jnp.sum(losses * weights)  # ignores mask: counts dropped clients
+    worst = jnp.max(losses)            # dropped clients' garbage wins the max
+    return total / jnp.maximum(1.0, jnp.sum(w_eff)), worst

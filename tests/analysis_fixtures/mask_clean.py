@@ -1,0 +1,23 @@
+"""mask-nan-safety negative fixture: every reduction is mask-aware, the
+``is None`` arm is exempt, and mask-free functions are out of scope."""
+import jax.numpy as jnp
+
+
+def masked_metrics(losses, weights, mask):
+    mf = mask.astype(jnp.float32)
+    w_eff = weights * mf
+    losses_eff = jnp.where(mf > 0, losses, 0.0)      # sanitized
+    total = jnp.sum(losses_eff * w_eff)
+    worst = jnp.max(jnp.where(mf > 0, losses, -jnp.inf))
+    count = jnp.maximum(1.0, jnp.sum(mf))
+    return total / count, worst
+
+
+def maybe_masked(losses, mask=None):
+    if mask is None:
+        return jnp.mean(losses)                      # unmasked arm: exempt
+    return jnp.mean(losses, where=mask > 0)
+
+
+def no_mask_here(losses):
+    return jnp.mean(losses)                          # no mask in scope

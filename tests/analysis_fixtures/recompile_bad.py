@@ -1,0 +1,28 @@
+"""recompile-hazard positive fixture: every hazard class."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpet"))  # typo!
+def kernel(x, bn: int = 128, interpret: bool = False):
+    return x * bn
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def step(x, cfg={"lr": 0.1}):  # unhashable static default
+    return x * cfg["lr"]
+
+
+@jax.jit
+def apply(params, x):
+    return params["w"] * x
+
+
+def driver():
+    y = kernel(0.5)                   # python scalar into non-static x
+    a = kernel(jnp.zeros((8, 8)))     # two literal shapes for the same
+    b = kernel(jnp.zeros((16, 16)))   # non-static param: compile per shape
+    z = apply({"w": 2.0}, y)          # dict of baked-in scalars
+    return a, b, z

@@ -1,0 +1,22 @@
+"""recompile-hazard negative fixture: statics declared, shapes stable."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def kernel(x, bn: int = 128, interpret: bool = False):
+    return x * bn
+
+
+@jax.jit
+def apply(params, x):
+    return params["w"] * x
+
+
+def driver(params, x):
+    y = kernel(x, bn=256)              # scalar into a *static* param: fine
+    a = kernel(jnp.zeros((8, 8)))      # one literal shape only
+    b = kernel(jnp.zeros((8, 8)))
+    return apply(params, y) + a + b    # params is a variable, not a literal

@@ -1,0 +1,21 @@
+"""rng-discipline positive fixture — regression copies of the two seeding
+bugs this PR fixed in launch/train.py, plus a key-reuse case."""
+import jax
+import numpy as np
+
+
+def round_batches(seed, rnd):
+    rng = np.random.default_rng(seed * 1000 + rnd)  # additive-seed
+    rng2 = np.random.default_rng(rnd)               # round-only-seed
+    return rng, rng2
+
+
+def batch_call(args, rnd, lm_round_batch):
+    # the launch/train.py:89 shape: affine seed smuggled through a kwarg
+    return lm_round_batch(n_clients=4, seed=args.seed * 1000 + rnd)
+
+
+def reuse(key):
+    a = jax.random.normal(key, (2,))
+    b = jax.random.uniform(key, (2,))  # key-reuse: replays a's stream
+    return a + b

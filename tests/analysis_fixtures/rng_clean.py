@@ -1,0 +1,30 @@
+"""rng-discipline negative fixture: tuple seeding and split-before-reuse."""
+import jax
+import numpy as np
+
+
+def round_batches(seed, rnd):
+    # the fixed launch/train.py shape: the (seed, rnd) tuple IS the seed
+    return np.random.default_rng((seed, rnd))
+
+
+def batch_call(args, rnd, lm_round_batch):
+    return lm_round_batch(n_clients=4, seed=(args.seed, rnd))
+
+
+def single_stream(seed):
+    return np.random.default_rng(seed)  # one seed, one stream: fine
+
+
+def no_reuse(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (2,))
+    b = jax.random.uniform(k2, (2,))
+    return a + b
+
+
+def resplit(key):
+    a = jax.random.normal(key, (2,))
+    key = jax.random.split(key, 2)[0]  # reassignment retires the old key
+    b = jax.random.normal(key, (2,))
+    return a + b

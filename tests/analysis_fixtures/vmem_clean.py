@@ -1,0 +1,24 @@
+"""pallas-vmem-budget negative fixture: declared budget, blocks well inside
+it, grid-invariant accumulator counted single-buffered."""
+import jax
+from jax.experimental import pallas as pl
+
+VMEM_BUDGET_ELEMS = 1 << 16
+VMEM_ASSUMES = {}
+
+BLOCK = 128
+
+
+def _acc_kernel(x_ref, o_ref):
+    o_ref[...] += x_ref[...]
+
+
+def accumulate(x):
+    # 2 x 128 pipelined in + 1 x 128 grid-invariant accumulator = 384 elems
+    return pl.pallas_call(
+        _acc_kernel,
+        grid=(x.shape[0] // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((BLOCK,), x.dtype),
+    )(x)

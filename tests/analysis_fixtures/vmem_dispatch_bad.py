@@ -1,0 +1,7 @@
+"""pallas-vmem-budget positive fixture: dispatches a kernel module with no
+reference to the ref oracle anywhere — no CPU / over-budget escape hatch."""
+from .vmem_clean import accumulate
+
+
+def reduce_updates(x):
+    return accumulate(x)

@@ -1,0 +1,10 @@
+"""pallas-vmem-budget negative fixture: dispatcher keeps the ref oracle as
+its escape hatch next to the kernel path."""
+from . import ref
+from .vmem_clean import BLOCK, accumulate
+
+
+def reduce_updates(x):
+    if x.shape[0] % BLOCK == 0:
+        return accumulate(x)
+    return ref.accumulate(x)

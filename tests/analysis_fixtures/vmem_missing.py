@@ -1,0 +1,20 @@
+"""pallas-vmem-budget positive fixture: missing-budget.
+
+Regression copy of the pre-PR state of the seven src/repro/kernels modules:
+a pallas_call file with no VMEM_BUDGET_ELEMS declaration at all."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def copy(x):
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(x.shape[0] // 128,),
+        in_specs=[pl.BlockSpec((128,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((128,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,35 @@
+"""pallas-vmem-budget positive fixture: over-budget and unresolved shapes."""
+import jax
+from jax.experimental import pallas as pl
+
+VMEM_BUDGET_ELEMS = 1 << 10  # 4 KB: far below the blocks declared here
+VMEM_ASSUMES = {"c": 1024}
+
+
+def _sum_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].sum(axis=0, keepdims=True)
+
+
+def over_budget(x):
+    c = 1024
+    bn = 8
+    # 2 x (1024*8) in + 2 x (1*8) out = 16400 elems >> 1024 budget
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(x.shape[1] // bn,),
+        in_specs=[pl.BlockSpec((c, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, x.shape[1]), x.dtype),
+    )(x)
+
+
+def unresolved(x, bn):
+    # bn is a runtime arg with no default and no VMEM_ASSUMES pin: the
+    # ceiling cannot be audited, which is itself the defect.
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(x.shape[1] // bn,),
+        in_specs=[pl.BlockSpec((1024, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, x.shape[1]), x.dtype),
+    )(x)

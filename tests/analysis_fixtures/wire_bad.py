@@ -1,0 +1,23 @@
+"""wire-accounting positive fixture: a codec subclass changes the encoded
+payload but inherits the parent's wire_bytes — cost model silently lies."""
+
+
+class UpdateCodec:
+    def wire_bytes(self, sizes):
+        return [4 * s for s in sizes]
+
+    def encode(self, delta):
+        return delta
+
+    def decode(self, payload):
+        return payload
+
+
+class EveryOtherCodec(UpdateCodec):
+    def encode(self, delta):           # halves the payload...
+        return delta[::2]
+
+    def decode(self, payload):
+        out = list(payload) * 2
+        return out[: len(payload) * 2]
+    # ...but no wire_bytes override: accounting still bills 4*s

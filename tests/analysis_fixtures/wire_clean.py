@@ -1,0 +1,33 @@
+"""wire-accounting negative fixture: overriding subclasses restate their
+wire cost; non-codec overrides are out of scope."""
+
+
+class UpdateCodec:
+    def wire_bytes(self, sizes):
+        return [4 * s for s in sizes]
+
+    def encode(self, delta):
+        return delta
+
+    def decode(self, payload):
+        return payload
+
+
+class HalfCodec(UpdateCodec):
+    def encode(self, delta):
+        return delta[::2]
+
+    def wire_bytes(self, sizes):       # payload changed, cost restated
+        return [4 * (s // 2) for s in sizes]
+
+
+class ScalarCodec(UpdateCodec):
+    def encode(self, delta):
+        return delta
+
+    def _wire_bytes_scalar(self, n):   # scalar-form accounting also counts
+        return 4 * n
+
+
+class NamedCodec(UpdateCodec):
+    name = "identity"                  # no codec-path override: exempt
