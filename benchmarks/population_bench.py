@@ -1,0 +1,131 @@
+"""Population-scale benchmark: round setup cost must be flat in N.
+
+The million-client engine's claim (core/population.py): with the packed
+struct-of-arrays fleet, *per-round* work — cohort sampling with streamed
+availability, cost ranking, jitter draws, and the CohortState
+gather/scatter of codec residual rows — is O(cohort), never O(N).  This
+harness measures exactly that loop at a fixed cohort size C while the
+population grows 10^3 -> 10^6, and reports:
+
+- ``build_s`` / ``pop_mb``: the one O(N) cost, paid once at construction
+  (~1 byte/device: uint8 profile codes + per-class columns);
+- ``round_setup_ms``: median per-round time for sample -> rank -> gather ->
+  scatter at C=16;
+- ``peak_mb``: tracemalloc peak across the measured rounds (started AFTER
+  the population is built, so it captures the per-round working set).
+
+Acceptance guards (ISSUE-7, asserted on every run including ``--smoke``):
+the 10^6-population round setup time and peak memory stay within 2x of the
+10^3 figures (plus small absolute floors — at these scales the absolute
+numbers are milliseconds and megabytes, where timer noise lives), and the
+packed fleet costs <= 2 bytes/device.
+
+  PYTHONPATH=src python -m benchmarks.population_bench [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+import tracemalloc
+
+import numpy as np
+
+from repro.core import (
+    AvailabilityTrace, CohortState, CostAwareFedAvg, CostModel, Population,
+    TopKCodec,
+)
+
+C = 16                  # fixed cohort size: the knob that MAY scale costs
+N_PARAMS = 50_000       # residual row width (a head-model-scale vector)
+UPDATE_BYTES = 200_000
+
+
+def _measure(n: int, *, rounds: int, seed: int = 0) -> dict:
+    t0 = time.perf_counter()
+    pop = Population.synthetic(n, seed=seed)
+    build_s = time.perf_counter() - t0
+
+    trace = AvailabilityTrace.from_profiles(pop, seed=seed, jitter_std=0.1)
+    cm = CostModel(profiles=[], update_bytes=UPDATE_BYTES, population=pop)
+    strat = CostAwareFedAvg(expected_steps=20)
+    store = CohortState(TopKCodec(frac=0.01), N_PARAMS, capacity=64)
+
+    tracemalloc.start()
+    times = []
+    for rnd in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        cohort = strat.sample_cohort(
+            rnd, pop, C, availability=trace, cost_model=cm, deadline_s=30.0
+        )
+        trace.step_jitter_for(rnd, cohort)
+        dense = store.gather(cohort)
+        # stand-in for the jitted round's residual update: any (C, n) result
+        store.scatter(cohort, np.asarray(dense) + 1.0)
+        times.append(time.perf_counter() - t0)
+        assert len(cohort) == C
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    return {
+        "n": n,
+        "build_s": build_s,
+        "pop_mb": pop.nbytes / 1e6,
+        "bytes_per_device": pop.nbytes / len(pop),
+        "round_setup_ms": float(np.median(times) * 1e3),
+        "peak_mb": peak / 1e6,
+        "rounds": rounds,
+        "cohort": C,
+        "store_rows": len(store),
+        "store_evictions": store.evictions,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: endpoints only (10^3 and 10^6)")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--out", default="BENCH_population.json")
+    args = ap.parse_args()
+    ns = (1_000, 1_000_000) if args.smoke else (1_000, 10_000, 100_000, 1_000_000)
+
+    rows = [_measure(n, rounds=args.rounds) for n in ns]
+    for r in rows:
+        print(
+            f"population[n={r['n']}] build={r['build_s'] * 1e3:.1f}ms "
+            f"pop={r['pop_mb']:.3f}MB ({r['bytes_per_device']:.2f} B/dev) "
+            f"round_setup={r['round_setup_ms']:.2f}ms peak={r['peak_mb']:.1f}MB"
+        )
+
+    with open(args.out, "w") as f:
+        json.dump({
+            "bench": "population", "cohort": C, "n_params": N_PARAMS,
+            "rounds": args.rounds, "runs": rows,
+        }, f, indent=2, default=float)
+    print(f"population[json] wrote {args.out}")
+
+    small, big = rows[0], rows[-1]
+    # flat-in-N guards: 2x plus an absolute floor (2 ms / 4 MB) so millisecond
+    # timer noise and allocator quantization cannot flake the ratio
+    t_small, t_big = small["round_setup_ms"], big["round_setup_ms"]
+    assert t_big <= max(2.0 * t_small, t_small + 2.0), (
+        f"round setup grew with N: {t_big:.2f}ms at n={big['n']} vs "
+        f"{t_small:.2f}ms at n={small['n']}"
+    )
+    m_small, m_big = small["peak_mb"], big["peak_mb"]
+    assert m_big <= max(2.0 * m_small, m_small + 4.0), (
+        f"round peak memory grew with N: {m_big:.1f}MB vs {m_small:.1f}MB"
+    )
+    assert big["bytes_per_device"] <= 2.0, (
+        f"packed fleet costs {big['bytes_per_device']:.2f} B/device (> 2)"
+    )
+    print(
+        "population[guards] OK: round setup "
+        f"{t_small:.2f}ms -> {t_big:.2f}ms and peak {m_small:.1f}MB -> "
+        f"{m_big:.1f}MB across a 1000x population growth at C={C}"
+    )
+
+
+if __name__ == "__main__":
+    main()

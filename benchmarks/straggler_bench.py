@@ -38,13 +38,15 @@ import jax
 import numpy as np
 
 from repro.core import (
-    AvailabilityTrace, BufferedAsync, Deadline, FedAvg, FedBuffStrategy,
-    JaxClient, PROFILES, Server, SyncAll,
+    AvailabilityTrace, BufferedAsync, CostAwareFedAvg, CostModel, Deadline,
+    FedAvg, FedBuffStrategy, JaxClient, LazyClientPool, PROFILES, Population,
+    Server, SyncAll,
 )
 from repro.core.server import make_cost_model_for
-from repro.data.federated import dirichlet_partition
+from repro.data.federated import ClientDataset, dirichlet_partition
 from repro.data.synthetic import make_features
 from repro.models import build_model
+from repro.utils.pytree import tree_bytes
 
 # straggler-heavy: one datacenter chip, two edge boards, three phones —
 # step times 0.010 / 0.153 / 0.290-0.370 s (a ~37x spread)
@@ -95,6 +97,58 @@ def _run(policy_name, strategy, policy, rounds, *, availability=None, seed=0):
     }
 
 
+POP_N, POP_COHORT, POP_SHARD = 60, 8, 32
+POP_MIX = ("jetson-tx2-gpu", "pixel-2", "pixel-3")
+
+
+def _run_population(policy_name, strategy, rounds, *, seed=0):
+    """Population-mode comparison row: blind vs cost-aware sampling at
+    EQUAL cohort size under the same Deadline(tau).  The fleet is a packed
+    60-device jetson/pixel population served by a LazyClientPool; the only
+    difference between the two rows is who gets drawn."""
+    m = build_model("mobilenet-head-office31")
+    data = make_features(n=POP_N * POP_SHARD, num_classes=31,
+                         feature_dim=m.cfg.feature_dim, seed=seed)
+    params = m.init(jax.random.key(seed))
+    mask = m.trainable_mask(params)
+    pop = Population.synthetic(POP_N, mix=POP_MIX, seed=seed)
+
+    def factory(cid):
+        lo = cid * POP_SHARD
+        return JaxClient(
+            client_id=cid, loss_fn=m.loss_fn, batch_size=16,
+            dataset=ClientDataset(client_id=cid, x=data.x[lo:lo + POP_SHARD],
+                                  y=data.y[lo:lo + POP_SHARD]),
+            trainable_mask=mask, device_profile=pop.profile(cid).name,
+        )
+
+    cm = CostModel(profiles=[], update_bytes=tree_bytes(params), population=pop)
+    spe = POP_SHARD // 16
+    jet = PROFILES["jetson-tx2-gpu"]
+    tau = 1.25 * (spe * jet.step_time_s
+                  + jet.comm_time_s(cm.update_bytes, cm.update_bytes))
+    srv = Server(
+        strategy=strategy, clients=LazyClientPool(pop, factory, capacity=POP_N),
+        cost_model=cm, policy=Deadline(tau=tau),
+        population=pop, cohort_size=POP_COHORT,
+    )
+    srv.logger.quiet = True
+    _, hist = srv.run(params, num_rounds=rounds)
+    return {
+        "policy": policy_name,
+        "rounds": rounds,
+        "final_acc": hist.final_accuracy(),
+        "total_time_s": hist.total_time_s,
+        "total_energy_kj": hist.total_energy_j / 1e3,
+        "comm_mb": sum(r.comm_bytes for r in hist.rounds) / 1e6,
+        "mean_participants": float(np.mean([r.participants for r in hist.rounds])),
+        "dropped_total": sum(r.dropped for r in hist.rounds),
+        "mean_staleness": float(np.mean([r.staleness_mean for r in hist.rounds])),
+        "acc_series": [r.eval_acc for r in hist.rounds],
+        "wall_series": [r.wall_time_s for r in hist.rounds],
+    }
+
+
 def time_to_acc(run: dict, target: float) -> float | None:
     """History.time_to_accuracy over the serialized series (same contract:
     cumulative virtual wall time through the first eval round >= target)."""
@@ -139,6 +193,18 @@ def main() -> None:
         runs.append(_run("sync_churn", FedAvg(local_epochs=1, local_lr=0.1),
                          SyncAll(), rounds, availability=trace))
 
+    # population mode, same deadline + cohort size: the only difference is
+    # WHO gets sampled — blind uniform vs cost-aware (Oort-lite) ranking
+    runs += [
+        _run_population("pop_blind", FedAvg(local_epochs=1, local_lr=0.1),
+                        rounds),
+        _run_population(
+            "pop_costaware",
+            CostAwareFedAvg(local_epochs=1, local_lr=0.1, expected_steps=2),
+            rounds,
+        ),
+    ]
+
     by_name = {r["policy"]: r for r in runs}
     target = 0.9 * by_name["sync"]["final_acc"]
     for r in runs:
@@ -173,8 +239,17 @@ def main() -> None:
         f"FedBuff acc {buf['final_acc']} below FedAvg {sync['final_acc']}"
     )
     assert ddl["dropped_total"] > 0 and buf["mean_staleness"] > 0
+    # ISSUE-7: cost-aware sampling makes the SAME cohort size lose fewer
+    # clients to the SAME deadline than the blind draw
+    blind, aware = by_name["pop_blind"], by_name["pop_costaware"]
+    assert aware["dropped_total"] < blind["dropped_total"], (
+        f"cost-aware drops {aware['dropped_total']} !< blind "
+        f"{blind['dropped_total']} at equal cohort size"
+    )
+    assert aware["mean_participants"] >= blind["mean_participants"]
     print("straggler[guards] OK: deadline+async beat sync wall; "
-          "fedbuff holds FedAvg accuracy")
+          "fedbuff holds FedAvg accuracy; cost-aware sampling drops "
+          f"{aware['dropped_total']} vs blind {blind['dropped_total']}")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,9 @@ from .compression import (
     UpdateCodec, Int8Codec, TopKCodec, NullCodec, MixedCodec,
     BandwidthCodecPolicy, compress_update, decompress_update,
 )
+from .population import CohortState, LazyClientPool, Population
 from .strategy import (
     Strategy, FedAvg, FedProx, FedTau, FedBuffStrategy, FedOpt, FedAdam,
     FedYogi, FedAvgM, STRATEGIES, tau_from_reference_processor,
+    CostAwareSampling, CostAwareFedAvg,
 )

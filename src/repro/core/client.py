@@ -71,6 +71,16 @@ class Client:
         rollback suffices: a client has at most one fit in flight (the
         Server never re-samples a busy client)."""
 
+    def export_state(self):
+        """Round-to-round carry as one flat fp32 row, or None if there is
+        none — what ``LazyClientPool`` spills into a ``CohortState`` when
+        it evicts this client (core/population.py's eviction contract)."""
+        return None
+
+    def import_state(self, state) -> None:
+        """Rehydrate a previously ``export_state``-ed row on a freshly
+        materialized client."""
+
 
 @dataclass
 class JaxClient(Client):
@@ -110,6 +120,16 @@ class JaxClient(Client):
 
     def discard_update(self) -> None:
         self._residual = self._residual_prev
+
+    def export_state(self):
+        return None if self._residual is None else np.asarray(self._residual)
+
+    def import_state(self, state) -> None:
+        row = jnp.asarray(state, jnp.float32)
+        self._residual = row
+        # the rollback point is the rehydrated row: a discard_update right
+        # after re-materialization must be a no-op, not a reset to None
+        self._residual_prev = row
 
     def steps_per_epoch(self) -> int:
         return self.dataset.steps_per_epoch(self.batch_size)

@@ -136,6 +136,18 @@ class UpdateCodec:
         """Zero error-feedback state: one flat fp32 residual per client."""
         return jnp.zeros((n_clients, n_params), jnp.float32)
 
+    def carries_client_state(self, n_params: int = 1) -> bool:
+        """Whether this codec owns round-to-round per-client state.
+
+        The population layer's ``CohortState`` consults this: a stateless
+        codec gathers ``()`` and spills nothing, a stateful one gathers a
+        dense residual row per sampled client.  Probes a one-client state
+        rather than trusting subclasses to remember a flag.
+        """
+        return bool(jax.tree_util.tree_leaves(
+            self.init_client_state(1, n_params)
+        ))
+
     # ---- batched (C, N) surface: the jitted parallel round step ----
     def aggregate_updates(
         self, client_params: PyTree, global_params: PyTree,
@@ -444,6 +456,12 @@ class MixedCodec(UpdateCodec):
     are deliberately absent: a single client belongs to exactly one group,
     so callers must dispatch through ``groups()`` (the sequential round
     engine does).
+
+    Population mode is out of scope by construction: the static
+    ``assignment`` binds codecs to client-axis *slots*, while a population
+    round resamples which client occupies each slot every round —
+    ``CohortState`` and the population ``Server`` both reject a MixedCodec
+    (per-device codec choice there goes through ``BandwidthCodecPolicy``).
     """
 
     codecs: tuple = ()

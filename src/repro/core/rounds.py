@@ -27,6 +27,15 @@ pytree, so the uncompressed engine allocates no client state at all.  The
 same signature holds whether or not anything is compressed: there is no
 forked "compressed round step" anymore.
 
+Population mode (core/population.py) changes none of this: the engine
+still receives a dense, static-shaped ``(C, n_params)`` ``client_state`` —
+the population layer *gathers* the sampled cohort's resident rows into
+that array before the call (row i belongs to cohort id i, missing/evicted
+rows are zeros) and *scatters* ``new_client_state`` back by the same id
+order afterwards.  C is the fixed cohort size, never the population size,
+so the jitted program, the participation mask, and the codec contracts are
+unchanged shape-wise round to round.
+
 Three mesh mappings (DESIGN.md §4), every one codec-aware:
 
 - **parallel** (no mesh): params/batches carry a leading client axis C;

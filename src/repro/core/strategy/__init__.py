@@ -4,6 +4,7 @@ from .fedbuff import FedBuffStrategy
 from .fedprox import FedProx
 from .fedtau import FedTau, tau_from_reference_processor
 from .fedopt import FedOpt, FedAdam, FedYogi, FedAvgM
+from .sampling import CostAwareFedAvg, CostAwareSampling
 
 STRATEGIES = {
     "fedavg": FedAvg,
@@ -13,10 +14,12 @@ STRATEGIES = {
     "fedadam": FedAdam,
     "fedyogi": FedYogi,
     "fedavgm": FedAvgM,
+    "costaware-fedavg": CostAwareFedAvg,
 }
 
 __all__ = [
     "Strategy", "weighted_mean", "pseudo_gradient",
     "FedAvg", "FedProx", "FedTau", "tau_from_reference_processor",
     "FedBuffStrategy", "FedOpt", "FedAdam", "FedYogi", "FedAvgM", "STRATEGIES",
+    "CostAwareSampling", "CostAwareFedAvg",
 ]

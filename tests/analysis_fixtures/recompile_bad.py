@@ -20,9 +20,23 @@ def apply(params, x):
     return params["w"] * x
 
 
+@jax.jit
+def cohort_step(client_state):
+    return client_state + 1.0
+
+
 def driver():
     y = kernel(0.5)                   # python scalar into non-static x
     a = kernel(jnp.zeros((8, 8)))     # two literal shapes for the same
     b = kernel(jnp.zeros((16, 16)))   # non-static param: compile per shape
     z = apply({"w": 2.0}, y)          # dict of baked-in scalars
     return a, b, z
+
+
+def population_driver():
+    # the gather/scatter hazard: feeding the jitted engine a cohort whose
+    # size follows the POPULATION (varying N) instead of a fixed C —
+    # every resample would recompile
+    small = cohort_step(jnp.zeros((16, 4)))
+    big = cohort_step(jnp.zeros((1000, 4)))
+    return small, big

@@ -15,8 +15,21 @@ def apply(params, x):
     return params["w"] * x
 
 
+@jax.jit
+def cohort_step(client_state):
+    return client_state + 1.0
+
+
 def driver(params, x):
     y = kernel(x, bn=256)              # scalar into a *static* param: fine
     a = kernel(jnp.zeros((8, 8)))      # one literal shape only
     b = kernel(jnp.zeros((8, 8)))
     return apply(params, y) + a + b    # params is a variable, not a literal
+
+
+def population_driver():
+    # population mode done right: the dense cohort is always (C, n) for one
+    # static C — gather/scatter resamples WHO fills the rows, not the shape
+    r1 = cohort_step(jnp.zeros((16, 4)))
+    r2 = cohort_step(jnp.zeros((16, 4)))
+    return r1, r2

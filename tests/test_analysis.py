@@ -56,6 +56,7 @@ FIRE = {
         ("driver", "py-scalar-arg"),
         ("kernel", "varying-shape"),
         ("driver", "container-arg"),
+        ("cohort_step", "varying-shape"),
     }),
     "pallas-vmem-budget": (("vmem_missing.py", "vmem_over.py"), {
         ("<module>", "missing-budget"),

@@ -1,0 +1,385 @@
+"""Million-client population layer (core/population.py).
+
+Pins the ISSUE-7 contracts:
+- packed struct-of-arrays fleet: ~1 byte/device, O(cohort) queries;
+- streamed availability/jitter is pool-composition-independent and agrees
+  with the full-vector surface on population-backed traces;
+- resident-only-when-sampled codec state: a population-backed round using
+  CohortState.gather/scatter is BITWISE the legacy full-cohort round for
+  N == C (globals, metrics, residual rows);
+- eviction resets the residual to zero and the post-eviction round is
+  bitwise the round of a fresh-residual client (error feedback intact);
+- Server population mode reproduces the legacy loop at N == cohort_size;
+- CostAwareSampling prefers deadline-feasible cohorts;
+- LazyClientPool spills/rehydrates client carry through the store.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AvailabilityTrace, CohortState, CostAwareFedAvg, CostModel, FedAvg,
+    Int8Codec, JaxClient, LazyClientPool, MixedCodec, NullCodec, Population,
+    RoundSpec, Server, TopKCodec, make_round_step,
+)
+from repro.core.cost_model import PIXEL_2, PIXEL_3, PIXEL_4
+from repro.data.federated import ClientDataset
+from repro.data.synthetic import make_features
+from repro.models import build_model
+from repro.optim import sgd
+from repro.utils.pytree import tree_size
+
+C, STEPS, B = 4, 2, 16
+
+
+# ---------------- packed representation ----------------
+def test_synthetic_population_is_flat():
+    pop = Population.synthetic(100_000, seed=7)
+    assert len(pop) == 100_000
+    # ~1 byte/device: uint8 codes + per-class columns, never per-device rows
+    assert pop.nbytes / len(pop) <= 2.0
+    assert pop.profile_codes.dtype == np.uint8
+    # profile() and column() answer from the same table
+    ids = np.asarray([0, 17, 99_999])
+    step = pop.column("step_time_s", ids)
+    for i, cid in enumerate(ids):
+        assert step[i] == pop.profile(int(cid)).step_time_s
+
+
+def test_from_profiles_roundtrip():
+    profiles = [PIXEL_4, PIXEL_3, PIXEL_4, PIXEL_2, PIXEL_3]
+    pop = Population.from_profiles(profiles)
+    assert len(pop) == 5 and pop.n_profiles == 3  # deduplicated classes
+    for i, p in enumerate(profiles):
+        assert pop.profile(i) is p
+
+
+def test_expected_round_s_matches_scalar_formula():
+    pop = Population.from_profiles([PIXEL_4, PIXEL_2])
+    t = pop.expected_round_s([0, 1], steps=10, up_bytes=1e6, down_bytes=1e6)
+    for i, p in enumerate((PIXEL_4, PIXEL_2)):
+        assert t[i] == pytest.approx(10 * p.step_time_s + p.comm_time_s(1e6, 1e6))
+
+
+# ---------------- streamed availability ----------------
+def test_streamed_availability_is_pool_independent():
+    pop = Population.synthetic(50_000, seed=3)
+    tr = AvailabilityTrace.from_profiles(pop, seed=11)
+    ids = np.asarray([5, 123, 4_567, 49_999])
+    solo = np.asarray([tr.available_for(4, [int(c)])[0] for c in ids])
+    pooled = tr.available_for(4, ids)
+    shuffled = tr.available_for(4, ids[::-1])[::-1]
+    np.testing.assert_array_equal(solo, pooled)
+    np.testing.assert_array_equal(shuffled, pooled)
+    # deterministic replay, but a different round is a different draw
+    np.testing.assert_array_equal(tr.available_for(4, ids), pooled)
+    assert any(
+        not np.array_equal(tr.available_for(r, np.arange(2000)),
+                           tr.available_for(4, np.arange(2000)))
+        for r in (5, 6, 7)
+    )
+
+
+def test_population_trace_full_vector_agrees_with_streamed():
+    pop = Population.synthetic(300, seed=2)
+    tr = AvailabilityTrace.from_profiles(pop, seed=9, jitter_std=0.1)
+    all_ids = np.arange(300)
+    np.testing.assert_array_equal(tr.available(6), tr.available_for(6, all_ids))
+    np.testing.assert_array_equal(tr.step_jitter(6), tr.step_jitter_for(6, all_ids))
+    assert tr.available(6, client_id=42) == bool(tr.available_for(6, [42])[0])
+
+
+def test_streamed_dropout_rate_tracks_class_rate():
+    pop = Population.synthetic(40_000, mix=("pixel-4",), seed=0)
+    tr = AvailabilityTrace.from_profiles(pop, seed=1, mobile_dropout=0.15)
+    up = tr.available_for(3, np.arange(len(pop)))
+    assert 1.0 - up.mean() == pytest.approx(0.15, abs=0.02)
+
+
+def test_population_trace_guards():
+    pop = Population.synthetic(100, seed=0)
+    with pytest.raises(ValueError):
+        AvailabilityTrace.from_profiles(pop, late_join=3)
+    with pytest.raises(AssertionError):
+        AvailabilityTrace(n_clients=100, dropout=(0.1,) * 100, population=pop)
+
+
+# ---------------- CohortState ----------------
+def test_cohort_state_eviction_resets_residual():
+    cs = CohortState(TopKCodec(frac=0.25), 8, capacity=2)
+    cs.put_row(1, np.full(8, 1.0))
+    cs.put_row(2, np.full(8, 2.0))
+    cs.get_row(1)                      # touch: 2 becomes LRU
+    cs.put_row(3, np.full(8, 3.0))     # evicts 2
+    assert cs.evictions == 1 and len(cs) == 2
+    g = np.asarray(cs.gather([1, 2, 3]))
+    assert g.shape == (3, 8)
+    np.testing.assert_array_equal(g[0], np.full(8, 1.0, np.float32))
+    np.testing.assert_array_equal(g[1], np.zeros(8))  # evicted -> fresh zeros
+    np.testing.assert_array_equal(g[2], np.full(8, 3.0, np.float32))
+
+
+def test_cohort_state_stateless_and_mixed():
+    assert CohortState(NullCodec(), 8).gather([1, 2, 3]) == ()
+    cs = CohortState(NullCodec(), 8)
+    cs.scatter([1, 2], ())  # no-op, not a crash
+    assert len(cs) == 0 and cs.nbytes == 0
+    with pytest.raises(TypeError):
+        CohortState(MixedCodec(codecs=(Int8Codec(),), assignment=(0,)), 8)
+
+
+# ---------------- jitted-engine bitwise parity ----------------
+def _engine_setup(seed=0):
+    m = build_model("mobilenet-head-office31")
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0.0, 1.0, size=(m.cfg.num_classes, m.cfg.feature_dim))
+
+    def batch_of(n, s):
+        r = np.random.default_rng(s)
+        y = r.integers(0, m.cfg.num_classes, n)
+        x = centers[y] + 0.4 * r.normal(size=(n, m.cfg.feature_dim))
+        return x.astype(np.float32), y.astype(np.int32)
+
+    xs, ys = zip(*[batch_of(STEPS * B, 100 + c) for c in range(C)])
+    train = {
+        "x": jnp.asarray(np.stack(xs).reshape(C, STEPS, B, -1)),
+        "y": jnp.asarray(np.stack(ys).reshape(C, STEPS, B)),
+    }
+    params = m.init(jax.random.key(seed))
+    return m, params, train
+
+
+def _jitted_round_step(m, codec):
+    spec = RoundSpec(max_steps=STEPS, execution_mode="parallel", codec=codec)
+    return jax.jit(make_round_step(m.loss_fn, sgd(0.1), FedAvg(), spec))
+
+
+@pytest.mark.parametrize("codec", [TopKCodec(frac=0.25), Int8Codec()])
+def test_population_round_bitwise_matches_legacy(codec):
+    """ISSUE-7 acceptance: cohort gather/scatter == threaded client state,
+    bitwise, for N == C — globals, metrics, and residual rows alike."""
+    m, params, train = _engine_setup()
+    rs = _jitted_round_step(m, codec)
+    n = tree_size(params)
+    w, bud = jnp.ones(C), jnp.full((C,), STEPS, jnp.int32)
+    cohort = list(range(C))
+
+    # legacy: dense (C, n) state threaded through every round
+    p_leg, s_leg = params, FedAvg().init_state(params)
+    cstate = codec.init_client_state(C, n)
+    legacy = []
+    for rnd in range(3):
+        p_leg, s_leg, cstate, met = rs(p_leg, s_leg, cstate, train, w, bud, rnd)
+        legacy.append(met)
+
+    # population: rows resident only for the round, via gather/scatter
+    store = CohortState(codec, n, capacity=16)
+    p_pop, s_pop = params, FedAvg().init_state(params)
+    for rnd in range(3):
+        dense = store.gather(cohort)
+        p_pop, s_pop, dense, met = rs(p_pop, s_pop, dense, train, w, bud, rnd)
+        store.scatter(cohort, dense)
+        for k, v in legacy[rnd].items():
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(met[k]), err_msg=k)
+
+    for a, b in zip(jax.tree.leaves(p_leg), jax.tree.leaves(p_pop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(cstate), np.asarray(store.gather(cohort))
+    )
+
+
+def test_eviction_round_bitwise_matches_fresh_residual():
+    """The eviction contract end-to-end: after an evicted row, the next
+    round is bitwise the round of a client that never compressed anything,
+    and error feedback keeps working from the reset."""
+    codec = TopKCodec(frac=0.25)
+    m, params, train = _engine_setup()
+    rs = _jitted_round_step(m, codec)
+    n = tree_size(params)
+    w, bud = jnp.ones(C), jnp.full((C,), STEPS, jnp.int32)
+    cohort = list(range(C))
+
+    def run(store_capacity):
+        store = CohortState(codec, n, capacity=store_capacity)
+        p, s = params, FedAvg().init_state(params)
+        outs = []
+        for rnd in range(3):
+            dense = store.gather(cohort)
+            p, s, dense, met = rs(p, s, dense, train, w, bud, rnd)
+            store.scatter(cohort, dense)
+            outs.append((p, met))
+        return store, outs
+
+    tight, tight_outs = run(store_capacity=1)   # every scatter evicts C-1 rows
+    assert tight.evictions > 0 and len(tight) == 1
+
+    # replay with the rows the tight store actually lost zeroed by hand:
+    # round r of the tight run must be bitwise round r of this run
+    store = CohortState(codec, n, capacity=16)
+    p, s = params, FedAvg().init_state(params)
+    for rnd in range(3):
+        dense = np.array(store.gather(cohort))
+        dense[: C - 1] = 0.0  # what eviction reset (only row C-1 survived)
+        p, s, new_dense, met = rs(p, s, jnp.asarray(dense), train, w, bud, rnd)
+        store.scatter(cohort, new_dense)
+        for k, v in tight_outs[rnd][1].items():
+            np.testing.assert_array_equal(np.asarray(v), np.asarray(met[k]), err_msg=k)
+        assert np.isfinite(float(met["residual_norm_mean"]))
+    for a, b in zip(jax.tree.leaves(tight_outs[-1][0]), jax.tree.leaves(p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------- Server population mode ----------------
+def _server_fixture(pop):
+    """Fresh model/clients for one Server.run (dataset cursors are stateful)."""
+    m = build_model("mobilenet-head-office31")
+    data = make_features(
+        n=C * 64, num_classes=m.cfg.num_classes, feature_dim=m.cfg.feature_dim,
+        seed=5,
+    )
+    names = [pop.profile(cid).name for cid in range(C)]
+
+    def factory(cid):
+        lo = cid * 64
+        return JaxClient(
+            client_id=cid, loss_fn=m.loss_fn, batch_size=B,
+            dataset=ClientDataset(
+                client_id=cid, x=data.x[lo:lo + 64], y=data.y[lo:lo + 64]
+            ),
+            device_profile=names[cid],
+        )
+
+    params = m.init(jax.random.key(0))
+    return m, params, factory
+
+
+def test_server_population_mode_matches_legacy():
+    """N == cohort_size, no churn: the population-mode Server round is
+    bitwise the legacy round (same cohort, costs, metrics, final global)."""
+    profiles = [PIXEL_4, PIXEL_3, PIXEL_2, PIXEL_4]
+    pop = Population.from_profiles(profiles)
+    m, params, factory = _server_fixture(pop)
+    strat = FedAvg(local_epochs=1)
+
+    legacy_cm = CostModel(profiles=profiles, update_bytes=40_000)
+    srv = Server(
+        strategy=strat, clients=[factory(c) for c in range(C)],
+        cost_model=legacy_cm,
+    )
+    g_leg, h_leg = srv.run(params, num_rounds=3)
+
+    pop_cm = CostModel(profiles=[], update_bytes=40_000, population=pop)
+    pool = LazyClientPool(pop, factory, capacity=8)
+    srv2 = Server(
+        strategy=strat, clients=pool, cost_model=pop_cm,
+        population=pop, cohort_size=C,
+    )
+    g_pop, h_pop = srv2.run(params, num_rounds=3)
+
+    for a, b in zip(h_leg.rounds, h_pop.rounds):
+        assert (a.train_loss, a.eval_loss, a.eval_acc) == (
+            b.train_loss, b.eval_loss, b.eval_acc
+        )
+        assert a.wall_time_s == b.wall_time_s
+        assert a.energy_j == b.energy_j
+        assert a.comm_bytes == b.comm_bytes
+        assert a.participants == b.participants
+    for a, b in zip(jax.tree.leaves(g_leg), jax.tree.leaves(g_pop)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert pool.live <= pool.capacity
+
+
+def test_server_population_mode_guards():
+    pop = Population.synthetic(64, seed=0)
+    srv = Server(strategy=FedAvg(), clients=LazyClientPool(pop, lambda c: None),
+                 population=pop)
+    with pytest.raises(ValueError):
+        srv.run({}, num_rounds=1)
+    srv = Server(
+        strategy=FedAvg(), clients=LazyClientPool(pop, lambda c: None),
+        population=pop, cohort_size=4,
+        codec=MixedCodec(codecs=(Int8Codec(),), assignment=(0,) * 4),
+    )
+    with pytest.raises(TypeError):
+        srv.run({}, num_rounds=1)
+
+
+# ---------------- cost-aware sampling ----------------
+def test_cost_aware_sampling_prefers_feasible():
+    pop = Population.synthetic(
+        4_000, mix={"jetson-tx2-gpu": 0.5, "pixel-2": 0.5}, seed=4
+    )
+    cm = CostModel(profiles=[], update_bytes=4_000_000, population=pop)
+    # pixel-2: 20*0.37 + links(4MB) ~ 10.1s; jetson: 20*0.153 + ~0.6s ~ 3.7s
+    tau = 6.0
+    aware = CostAwareFedAvg(expected_steps=20)
+    blind = FedAvg()
+    cohort = aware.sample_cohort(2, pop, 16, cost_model=cm, deadline_s=tau)
+    t = pop.expected_round_s(cohort, steps=20, up_bytes=4e6, down_bytes=4e6)
+    assert len(cohort) == 16 and (t <= tau).all()
+    assert all(pop.profile(c).name == "jetson-tx2-gpu" for c in cohort)
+    b = blind.sample_cohort(2, pop, 16)
+    tb = pop.expected_round_s(b, steps=20, up_bytes=4e6, down_bytes=4e6)
+    assert (tb > tau).any()  # the blind draw includes predicted stragglers
+
+
+def test_cost_aware_fills_from_infeasible_fastest_first():
+    pop = Population.synthetic(50, mix=("pixel-2", "pixel-3"), seed=1)
+    cm = CostModel(profiles=[], update_bytes=4_000_000, population=pop)
+    aware = CostAwareFedAvg(expected_steps=20)
+    # impossible deadline: nobody is feasible, so ranking is fastest-first
+    cohort = aware.sample_cohort(1, pop, 10, cost_model=cm, deadline_s=1e-6)
+    assert len(cohort) == 10
+    names = {pop.profile(c).name for c in cohort}
+    # pixel-3 is strictly faster; with ~25 of each, the 10 fastest are all pixel-3
+    assert names == {"pixel-3"}
+
+
+def test_sample_clients_population_dispatch():
+    pop = Population.synthetic(10_000, seed=0)
+    strat = FedAvg(min_fit_clients=8, fraction_fit=0.0)
+    chosen = strat.sample_clients(3, pop)
+    assert len(chosen) == 8 and chosen == sorted(chosen)
+    assert all(0 <= c < 10_000 for c in chosen)
+    assert chosen == strat.sample_clients(3, pop)  # deterministic in (seed, rnd)
+
+
+# ---------------- LazyClientPool ----------------
+class _StubClient:
+    def __init__(self, cid):
+        self.cid = cid
+        self.row = None
+
+    def export_state(self):
+        return self.row
+
+    def import_state(self, state):
+        self.row = np.asarray(state, np.float32)
+
+
+def test_lazy_pool_spills_and_rehydrates():
+    pop = Population.synthetic(100, seed=0)
+    store = CohortState(TopKCodec(frac=0.5), 4, capacity=64)
+    pool = LazyClientPool(pop, _StubClient, capacity=1, state_store=store)
+    c0 = pool[0]
+    c0.row = np.asarray([1.0, 2.0, 3.0, 4.0], np.float32)
+    pool[1]                       # capacity 1: evicts client 0, spilling its row
+    assert pool.live == 1
+    assert store.get_row(0) is not None
+    c0_again = pool[0]            # fresh object, rehydrated carry
+    assert c0_again is not c0
+    np.testing.assert_array_equal(c0_again.row, [1.0, 2.0, 3.0, 4.0])
+    assert pool.materializations == 3
+    assert len(pool) == 100
+    pool.reset_state()
+    assert pool.live == 0 and len(store) == 0
+
+
+def test_cost_model_profile_for_population():
+    pop = Population.from_profiles([PIXEL_4, PIXEL_2])
+    cm = CostModel(profiles=[], update_bytes=1, population=pop)
+    assert cm.profile_for(0) is PIXEL_4 and cm.profile_for(1) is PIXEL_2
+    legacy = CostModel(profiles=[PIXEL_4, PIXEL_2], update_bytes=1)
+    assert legacy.profile_for(2) is PIXEL_4  # round-robin unchanged
