@@ -3,7 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows (derived = the quantity the
 paper's table reports: accuracy / minutes / kJ or bandwidth).
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
+
+``--smoke`` runs only the framework micro-benches (round step, aggregation,
+compression) — the CI drift gate that every bench entry point still matches
+the library's current signatures; ``--fast`` additionally runs the paper
+tables at reduced grids.
 """
 from __future__ import annotations
 
@@ -97,6 +102,8 @@ def bench_compression() -> list[str]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="micro-benches only (skip the paper tables)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -106,8 +113,9 @@ def main() -> None:
         print(row)
     for row in bench_compression():
         print(row)
-    for row in bench_paper_tables(args.fast):
-        print(row)
+    if not args.smoke:
+        for row in bench_paper_tables(args.fast):
+            print(row)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,206 @@
+"""Rounds-as-scan benchmark: one compiled run vs the per-round python loop.
+
+The scan driver's reason to exist, measured: ``Server.run_scanned`` compiles
+the WHOLE training run into one ``lax.scan`` over the jitted round step —
+no per-round python dispatch, no per-round host sync, metrics pulled from
+the device exactly once.  This harness runs the same schedule through both
+drivers at R rounds and reports rounds/sec plus the compiled memory story:
+
+- ``scan``   — ``run_scanned(...)``: one ``jax.jit`` entry for R rounds,
+  donated carry, stacked metrics decoded post-hoc.
+- ``python`` — ``run_scanned(..., reference=True)``: the SAME schedule,
+  verdict helpers, and jitted round step, re-entering python (and paying a
+  ``device_get``) every round — bitwise-equal results, per-round overhead.
+
+Timings exclude compile (one warmup run each) — the win being measured is
+dispatch/sync overhead, not tracing.  ``temp_bytes`` is XLA's compiled
+scratch allocation at R=8 vs R=32 with per-round-constant batches: the
+donated carry must keep it FLAT in R.
+
+Rows print CSV-style like the other benches; ``--out`` (default
+``BENCH_scan.json``) captures the results machine-readably so the perf
+trajectory accumulates across PRs.
+
+``--smoke`` is the CI guard (tiny model, R in {8, 32}) and asserts the
+ISSUE-8 acceptance criteria:
+
+- scanned rounds/sec >= 2x the python driver at R=32, and
+- compiled temp memory at R=32 is flat vs R=8 (within 5%).
+
+  PYTHONPATH=src python -m benchmarks.scan_bench [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import (
+    AvailabilityTrace, Deadline, FedAvg, PROFILES, RoundSpec, Server,
+    make_multi_round_step,
+)
+from repro.core.cost_model import CostModel
+from repro.models import build_model
+from repro.optim import sgd
+from repro.utils.pytree import tree_size
+
+# same mixed fleet as straggler_bench: the Deadline mask is non-trivial
+FLEET = (
+    "tpu-v5e-chip", "jetson-tx2-gpu", "jetson-tx2-gpu",
+    "pixel-2", "pixel-2", "pixel-3",
+)
+C = len(FLEET)
+
+
+def _model():
+    """The REDUCED head (7k params, ~0.4ms/round of XLA compute): what
+    this bench measures is per-round driver overhead — at the full head's
+    ~140ms/round both drivers are compute-bound and indistinguishable."""
+    arch = replace(get_config("mobilenet-head-office31"),
+                   name="mobilenet-head-office31-reduced")
+    return build_model(arch)
+
+
+def _setup(R, *, steps=2, batch=8, seed=0):
+    m = _model()
+    params = m.init(jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    batches = {
+        "x": jnp.asarray(rng.normal(
+            size=(R, C, steps, batch, m.cfg.feature_dim)).astype(np.float32)),
+        "y": jnp.asarray(rng.integers(
+            0, m.cfg.num_classes, (R, C, steps, batch)).astype(np.int32)),
+    }
+    spec = RoundSpec(max_steps=steps, execution_mode="parallel")
+    cm = CostModel(profiles=[PROFILES[p] for p in FLEET],
+                   update_bytes=4 * tree_size(params))
+    tau = 1.25 * cm.client_round_cost(1, steps).t_total_s
+    trace = AvailabilityTrace.from_profiles(
+        [PROFILES[p] for p in FLEET], seed=seed,
+        mobile_dropout=0.3, jitter_std=0.1,
+    )
+    return m, params, batches, spec, cm, tau, trace
+
+
+def _server(cm, tau, trace):
+    srv = Server(strategy=FedAvg(), clients=[], cost_model=cm,
+                 policy=Deadline(tau=tau), availability=trace)
+    srv.logger.quiet = True
+    return srv
+
+
+def bench_drivers(R, *, repeats=3, seed=0) -> dict:
+    """Wall-clock one full R-round run through each driver (post-warmup
+    best of ``repeats``) and return rounds/sec for both."""
+    m, params, batches, spec, cm, tau, trace = _setup(R, seed=seed)
+    kw = dict(loss_fn=m.loss_fn, opt=sgd(0.1), spec=spec, batches=batches)
+    out = {"R": R}
+    for name, ref in (("scan", False), ("python", True)):
+        # ONE server per driver: its compiled-program memo is what makes
+        # the warmup count (run_scanned re-seeds strategy/client state per
+        # call, so repeats are bitwise-identical runs)
+        srv = _server(cm, tau, trace)
+        srv.run_scanned(params, R, reference=ref, **kw)  # warmup/compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            _, hist, _ = srv.run_scanned(params, R, reference=ref, **kw)
+            best = min(best, time.perf_counter() - t0)
+        out[name] = {
+            "wall_s": best,
+            "rounds_per_s": R / best,
+            "final_loss": hist.rounds[-1].train_loss,
+        }
+    out["speedup"] = out["scan"]["rounds_per_s"] / out["python"]["rounds_per_s"]
+    return out
+
+
+def temp_bytes_vs_rounds(r_values=(8, 32), *, steps=2, batch=8, seed=0) -> dict:
+    """Compiled temp allocation of the donated scan at each R, with
+    per-round-constant batches (the O(R) inputs removed): flat == the
+    carry really aliases in place."""
+    m = _model()
+    params = m.init(jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    one = {
+        "x": jnp.asarray(rng.normal(
+            size=(C, steps, batch, m.cfg.feature_dim)).astype(np.float32)),
+        "y": jnp.asarray(rng.integers(
+            0, m.cfg.num_classes, (C, steps, batch)).astype(np.int32)),
+    }
+    spec = RoundSpec(max_steps=steps, execution_mode="parallel")
+    strat = FedAvg()
+    w = jnp.ones((C,))
+    bud = jnp.full((C,), steps, jnp.int32)
+    cs = spec.codec.init_client_state(C, tree_size(params))
+    out = {}
+    for R in r_values:
+        multi = make_multi_round_step(
+            m.loss_fn, sgd(0.1), strat, spec, R, stacked_batches=False
+        )
+        sched = (jnp.ones((R, C), jnp.float32),
+                 jnp.zeros((R, C), jnp.float32),
+                 jnp.zeros((R, C), jnp.float32))
+        ma = jax.jit(multi, donate_argnums=(0, 1, 2)).lower(
+            params, strat.init_state(params), cs, one, w, bud, *sched
+        ).compile().memory_analysis()
+        out[str(R)] = None if ma is None else int(ma.temp_size_in_bytes)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, nargs="+", default=[8, 32])
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: R in {8, 32} + acceptance asserts")
+    ap.add_argument("--out", default="BENCH_scan.json")
+    args = ap.parse_args()
+    r_values = [8, 32] if args.smoke else args.rounds
+    repeats = 2 if args.smoke else args.repeats
+
+    runs = [bench_drivers(R, repeats=repeats) for R in r_values]
+    for r in runs:
+        print(
+            f"scan[R={r['R']}] "
+            f"scan={r['scan']['rounds_per_s']:.2f}r/s "
+            f"python={r['python']['rounds_per_s']:.2f}r/s "
+            f"speedup={r['speedup']:.2f}x "
+            f"loss={r['scan']['final_loss']:.4f}"
+        )
+
+    temps = temp_bytes_vs_rounds(tuple(r_values))
+    print("scan[temp_bytes] " + " ".join(
+        f"R={k}:{v}" for k, v in temps.items()
+    ))
+
+    with open(args.out, "w") as f:
+        json.dump({
+            "bench": "scan", "fleet": FLEET, "r_values": r_values,
+            "runs": runs, "temp_bytes": temps,
+        }, f, indent=2, default=float)
+    print(f"scan[json] wrote {args.out}")
+
+    # acceptance guards (CI runs --smoke): the compiled run amortizes the
+    # per-round dispatch, and the donated carry keeps memory flat in R
+    big = max(runs, key=lambda r: r["R"])
+    assert big["speedup"] >= 2.0, (
+        f"scan speedup {big['speedup']:.2f}x < 2x at R={big['R']}"
+    )
+    vals = [v for v in temps.values() if v is not None]
+    if len(vals) >= 2:
+        assert max(vals) <= min(vals) * 1.05, (
+            f"compiled temp memory scales with R: {temps}"
+        )
+    print(f"scan[guards] OK: {big['speedup']:.2f}x rounds/sec at "
+          f"R={big['R']}; temp bytes flat in R")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,7 @@ import ast
 from ..core import Finding, Project, attr_chain, own_nodes
 
 NAME = "jit-host-sync"
-ROOTS = ("make_round_step", "make_client_update")
+ROOTS = ("make_round_step", "make_client_update", "make_multi_round_step")
 SYNC_ATTRS = {"item": "item", "block_until_ready": "block-until-ready"}
 DEVICE_CALLS = {
     "devices", "local_devices", "device_count", "local_device_count",

@@ -14,7 +14,10 @@ from .scheduler import (
     VirtualClock, Arrival, RoundOutcome, RoundPolicy, SyncAll, Deadline,
     BufferedAsync,
 )
-from .rounds import RoundSpec, make_round_step, make_client_update
+from .rounds import (
+    RoundSpec, cohort_dispatch_mask, make_client_update, make_multi_round_step,
+    make_round_step,
+)
 from .compression import (
     UpdateCodec, Int8Codec, TopKCodec, NullCodec, MixedCodec,
     BandwidthCodecPolicy, compress_update, decompress_update,

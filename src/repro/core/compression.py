@@ -103,6 +103,7 @@ the full surface the engine and protocol layer program against:
 """
 from __future__ import annotations
 
+import math
 from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any
@@ -369,7 +370,9 @@ class TopKCodec(UpdateCodec):
     frac: float = 0.01
 
     def k_of(self, n_params: int) -> int:
-        return max(1, int(n_params * self.frac))
+        # math.floor, not int(): n_params is static, but this method is
+        # jit-reachable and a py-cast here would read as tracer concretization
+        return max(1, math.floor(n_params * self.frac))
 
     def _wire_bytes_scalar(self, n_params: int) -> int:
         return self.k_of(n_params) * 8  # int32 index + fp32 value
@@ -501,14 +504,14 @@ class MixedCodec(UpdateCodec):
         return len(self.assignment)
 
     def groups(self):
-        """-> [(bank_index, codec, client-index array)] for every NON-EMPTY
-        group, in bank order.  The index arrays are static numpy data: under
-        jit they become constant gathers, so every group is shape-static."""
-        assign = np.asarray(self.assignment, np.int64)
+        """-> [(bank_index, codec, client-index list)] for every NON-EMPTY
+        group, in bank order.  The index lists are static python data (the
+        assignment is a trace-time constant): under jit they become constant
+        gathers, so every group is shape-static."""
         return [
-            (g, codec, np.flatnonzero(assign == g))
+            (g, codec, idx)
             for g, codec in enumerate(self.codecs)
-            if (assign == g).any()
+            if (idx := [i for i, a in enumerate(self.assignment) if a == g])
         ]
 
     # ---- per-client state: one entry per bank codec ----
@@ -541,11 +544,12 @@ class MixedCodec(UpdateCodec):
         )
         new_states = list(state)
         for g, codec, idx in self.groups():
-            params_g = jax.tree.map(lambda x: x[idx], client_params)
+            ia = jnp.asarray(idx)  # static rows -> constant gather under jit
+            params_g = jax.tree.map(lambda x: x[ia], client_params)
             avg_g, new_states[g] = codec.aggregate_updates(
-                params_g, global_params, wf[idx], state[g]
+                params_g, global_params, wf[ia], state[g]
             )
-            wsum_g = jnp.sum(wf[idx])  # group mean * mass = partial sum
+            wsum_g = jnp.sum(wf[ia])  # group mean * mass = partial sum
             total = jax.tree.map(
                 lambda t, a, gp: t
                 + (a.astype(jnp.float32) - gp.astype(jnp.float32)) * wsum_g,
@@ -567,10 +571,11 @@ class MixedCodec(UpdateCodec):
         total = jnp.zeros((deltas.shape[1],), jnp.float32)
         new_states = list(state)
         for g, codec, idx in self.groups():
+            ia = jnp.asarray(idx)
             mean_g, new_states[g] = codec.aggregate_batch(
-                deltas[idx], wf[idx], state[g]
+                deltas[ia], wf[ia], state[g]
             )
-            total = total + mean_g.astype(jnp.float32) * jnp.sum(wf[idx])
+            total = total + mean_g.astype(jnp.float32) * jnp.sum(wf[ia])
         return total / safe_weight_sum(wf), tuple(new_states)
 
     # ---- per-group wire accounting ----

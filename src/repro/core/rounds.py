@@ -76,6 +76,41 @@ rejects ``MixedCodec`` at build time: one SPMD program, one wire format.
 The paper's tau-cutoff becomes a *per-client step budget* ``step_budgets``
 (int (C,)): clients keep stepping while ``i < budget_c`` and freeze their
 parameters afterwards — shape-static, mask-realized partial work.
+
+Rounds-as-scan (``make_multi_round_step``)
+------------------------------------------
+
+The uniform ``round_step`` is also the body of ONE ``lax.scan`` over R
+rounds, so a whole training run compiles to a single traced program
+(``Server.run_scanned`` is the driver; ``benchmarks/scan_bench.py``
+measures the rounds/sec win over the per-round python loop).
+
+- **Carry**: ``(global_params, server_state, client_state)`` — exactly
+  the three state pytrees every ``round_step`` threads.  The driver jits
+  with ``donate_argnums=(0, 1, 2)`` so XLA aliases the carry buffers
+  in place and peak memory stays flat in R.
+- **xs**: ``rnd`` (int32 (R,)), per-round batch slices when batches are
+  stacked (R, C, ...) (per-round-constant (C, ...) batches are instead
+  closed over, keeping memory flat in R), and the precomputed (R, C)
+  schedule rows — availability (``AvailabilityTrace.available_matrix``),
+  finish-time offsets (``CostModel.fleet_time_matrix``), and cohort
+  priorities (``cohort_priority_matrix``).  All churn/jitter randomness
+  is decided host-side before the trace, from the same seeded draws the
+  event-driven driver makes.
+- **Body**: dispatch mask = availability ∩ on-device cohort top-k
+  (``cohort_dispatch_mask``), then the static policy's pure-array
+  verdict (``RoundPolicy.plan_arrays``) picks the reporters and the
+  round's wall clock, and ``round_step`` runs under that mask.
+- **ys**: the per-round metrics dict plus masks/wall/participation
+  counts, stacked on device and decoded to a ``History`` once at the
+  end — no host sync inside the run.
+
+Which policies can trace: ``SyncAll`` and ``Deadline`` — their verdict
+is a pure function of THIS round's dispatch set and finish times.
+``BufferedAsync`` cannot (v1): its pending set is data-dependent-size
+state threaded between rounds (an arrival consumed at round r may have
+launched at r-3), which has no static-shape scan carry without a
+fixed-slot in-flight buffer — future work, documented out of scope.
 """
 from __future__ import annotations
 
@@ -85,7 +120,6 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.optim import Optimizer
 from repro.utils.pytree import safe_weight_sum, tree_where
@@ -243,14 +277,15 @@ def _carry_masked_state(codec, mask, old_state, new_state):
         return leaf
 
     if isinstance(codec, MixedCodec):
-        assign = np.asarray(codec.assignment)
         out = list(new_state)
         for g in range(len(codec.codecs)):
             if not jax.tree.leaves(new_state[g]):
                 continue  # stateless group (Null): nothing to carry
-            idx = np.flatnonzero(assign == g)
+            # static python index list (the assignment is a trace-time
+            # constant) — no host numpy inside the traced region
+            idx = [i for i, a in enumerate(codec.assignment) if a == g]
             out[g] = jax.tree.map(
-                keep_rows(mask[idx]), old_state[g], new_state[g]
+                keep_rows(mask[jnp.asarray(idx)]), old_state[g], new_state[g]
             )
         return tuple(out)
     if not jax.tree.leaves(new_state):
@@ -550,10 +585,11 @@ def make_round_step(
             # scans, all normalized by the ONE fleet-wide weight sum
             new_states = list(client_state)
             for g, codec_g, idx in codec.groups():
+                ia = jnp.asarray(idx)  # static rows -> constant gather
                 xs_g = (
-                    jax.tree.map(lambda x: x[idx], batches),
-                    wf[idx], step_budgets[idx],
-                    *(() if mf is None else (mf[idx],)),
+                    jax.tree.map(lambda x: x[ia], batches),
+                    wf[ia], step_budgets[ia],
+                    *(() if mf is None else (mf[ia],)),
                     client_state[g],
                 )
                 carry, new_states[g] = jax.lax.scan(
@@ -590,3 +626,133 @@ def make_round_step(
         return new_global, new_state, new_client_state, metrics
 
     return round_step
+
+
+def cohort_dispatch_mask(priorities, avail_mask, cohort_size: int):
+    """On-device cohort sampling: the ``cohort_size`` available clients
+    with the LOWEST priorities win (uniform priorities == a uniform draw
+    without replacement).
+
+    Pure array code so it runs identically traced inside the scan body and
+    eagerly in the reference driver.  Unavailable clients rank at +inf, so
+    a round with fewer than ``cohort_size`` available clients dispatches
+    only whoever is up (including nobody) — the scan-world analogue of
+    ``Strategy.sample_cohort``'s short-cohort contract.  The double stable
+    argsort turns priorities into dense ranks; ties (exactly equal float
+    priorities) break by client id, deterministically.
+    """
+    pri = jnp.where(avail_mask > 0, priorities, jnp.inf)
+    order = jnp.argsort(pri, stable=True)
+    ranks = jnp.argsort(order, stable=True)
+    return jnp.where((ranks < cohort_size) & (avail_mask > 0), 1.0, 0.0)
+
+
+def make_multi_round_step(
+    loss_fn: Callable,
+    opt: Optimizer,
+    strategy: Strategy,
+    spec: RoundSpec,
+    num_rounds: int,
+    *,
+    policy=None,
+    tau: float | None = None,
+    cohort_size: int | None = None,
+    trainable_mask: PyTree | None = None,
+    mesh=None,
+    client_axes: tuple[str, ...] = ("data",),
+    param_shardings: PyTree | None = None,
+    stacked_batches: bool = True,
+):
+    """Compile ``num_rounds`` FL rounds into ONE ``lax.scan`` over the
+    uniform ``round_step`` (module docstring: "the scanned trainer").
+
+    Returns::
+
+        multi_round_step(global_params, server_state, client_state,
+                         batches, weights, step_budgets,
+                         avail, t_total, priorities)
+            -> (new_global, new_server_state, new_client_state, stacked)
+
+    where ``avail`` / ``t_total`` / ``priorities`` are the precomputed
+    (R, C) schedule matrices (``AvailabilityTrace.available_matrix``,
+    ``CostModel.fleet_time_matrix``, ``cohort_priority_matrix``) and
+    ``stacked`` is a dict of (R,)- and (R, C)-shaped per-round outputs
+    (the round_step metrics plus ``participation_mask``,
+    ``dispatch_mask``, ``round_wall_s``, ``participants``,
+    ``dispatched``) decoded to a ``History`` once, after the scan.
+
+    ``batches``: leaves lead with (R, C, max_steps, ...) when
+    ``stacked_batches`` (each round gets its own slice) or (C, max_steps,
+    ...) when not — the same batch every round, closed over as a
+    scan-invariant constant so device memory stays flat in R.
+
+    Scheduling is the static ``policy``'s pure-array verdict
+    (``RoundPolicy.plan_arrays``): each round the body computes a
+    dispatch mask (availability ∩ on-device cohort top-k when
+    ``cohort_size`` is set), asks the policy who reports and how long the
+    round ran, and feeds the reporter mask to ``round_step`` — deadline
+    drops, churn, and sampling all happen on device.  ``tau`` must be a
+    pre-resolved host float (``Deadline.resolve_tau``); only
+    ``traceable`` policies are accepted (``SyncAll``, ``Deadline`` —
+    ``BufferedAsync`` carries a cross-round pending set and cannot trace,
+    see ``core/scheduler.py``).
+    """
+    from .scheduler import SyncAll
+
+    round_step = make_round_step(
+        loss_fn, opt, strategy, spec, trainable_mask, mesh, client_axes,
+        param_shardings,
+    )
+    policy = SyncAll() if policy is None else policy
+    if not getattr(policy, "traceable", False):
+        raise NotImplementedError(
+            f"{type(policy).__name__} cannot run inside lax.scan: its "
+            "verdict depends on cross-round pending-arrival state (see "
+            "core/scheduler.py); use Server.run, or a traceable policy "
+            "(SyncAll, Deadline)"
+        )
+    R = num_rounds  # build-time static (no cast: this fn is a lint root)
+
+    def multi_round_step(
+        global_params, server_state, client_state, batches, weights,
+        step_budgets, avail, t_total, priorities,
+    ):
+        def body(carry, xs):
+            g, ss, cs = carry
+            if stacked_batches:
+                rnd, batch_r, avail_r, t_r, pri_r = xs
+            else:
+                rnd, avail_r, t_r, pri_r = xs
+                batch_r = batches
+            if cohort_size is None:
+                dispatch_mask = avail_r
+            else:
+                dispatch_mask = cohort_dispatch_mask(
+                    pri_r, avail_r, cohort_size
+                )
+            mask, round_end = policy.plan_arrays(dispatch_mask, t_r, tau=tau)
+            g, ss, cs, met = round_step(
+                g, ss, cs, batch_r, weights, step_budgets, rnd, mask
+            )
+            ys = {
+                **met,
+                "participation_mask": mask,
+                "dispatch_mask": dispatch_mask,
+                "round_wall_s": round_end,
+                "participants": jnp.sum(jnp.where(mask > 0, 1.0, 0.0)),
+                "dispatched": jnp.sum(jnp.where(dispatch_mask > 0, 1.0, 0.0)),
+            }
+            return (g, ss, cs), ys
+
+        rnds = jnp.arange(1, R + 1, dtype=jnp.int32)
+        xs = (
+            rnds,
+            *((batches,) if stacked_batches else ()),
+            avail, t_total, priorities,
+        )
+        (g, ss, cs), stacked = jax.lax.scan(
+            body, (global_params, server_state, client_state), xs
+        )
+        return g, ss, cs, stacked
+
+    return multi_round_step

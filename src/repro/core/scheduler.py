@@ -148,7 +148,19 @@ def _by_arrival(pending: list[Arrival]) -> list[Arrival]:
 
 
 class RoundPolicy:
-    """Decides which pending arrivals a round consumes (module docstring)."""
+    """Decides which pending arrivals a round consumes (module docstring).
+
+    Policies whose verdict is a pure function of *this round's* dispatch
+    set and finish times additionally expose ``plan_arrays`` — the same
+    decision restated as array code so the rounds-as-scan trainer
+    (``make_multi_round_step``) can trace it inside ``lax.scan``.  A
+    policy is ``traceable`` iff its verdict carries no cross-round state:
+    ``SyncAll`` and ``Deadline`` qualify; ``BufferedAsync`` does not (its
+    pending set is data-dependent-size state threaded *between* rounds —
+    a fixed-slot in-flight buffer in the scan carry is future work).
+    """
+
+    traceable: bool = False
 
     def plan(
         self, clock: VirtualClock, pending: list[Arrival], rnd: int,
@@ -156,10 +168,29 @@ class RoundPolicy:
     ) -> RoundOutcome:
         raise NotImplementedError
 
+    def plan_arrays(self, dispatch_mask, t_total, *, tau: float | None = None):
+        """Pure-array round verdict: ``(participation_mask, round_end)``.
+
+        ``dispatch_mask`` is the float ``(C,)`` 0/1 mask of clients
+        launched this round; ``t_total`` their ``(C,)`` finish offsets
+        (compute + comm, seconds from round start).  Returns the float
+        ``(C,)`` mask of *reporters* (a subset of the dispatch mask) and
+        the round's wall-clock duration — both as traced arrays, bitwise
+        consistent with ``plan`` on the same inputs.  ``tau`` must be a
+        static host float (resolve it once via ``Deadline.resolve_tau``
+        *before* tracing; ``resolve_tau`` itself is host-only code).
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} has no pure-array form "
+            "(traceable=False); use the event-driven Server.run driver"
+        )
+
 
 @dataclass(frozen=True)
 class SyncAll(RoundPolicy):
     """Lockstep FedAvg: wait for everyone; the slowest client ends the round."""
+
+    traceable = True
 
     def plan(self, clock, pending, rnd, strategy=None):
         order = _by_arrival(pending)
@@ -168,6 +199,15 @@ class SyncAll(RoundPolicy):
             rnd=rnd, round_start=clock.now, round_end=max(end, clock.now),
             reported=order,
         )
+
+    def plan_arrays(self, dispatch_mask, t_total, *, tau=None):
+        import jax.numpy as jnp
+
+        mask = dispatch_mask
+        # empty dispatch -> all-zero where -> end 0.0, matching plan's
+        # `default=clock.now` (round_end - round_start == 0)
+        end = jnp.max(jnp.where(mask > 0, t_total, 0.0))
+        return mask, end
 
 
 @dataclass(frozen=True)
@@ -180,6 +220,7 @@ class Deadline(RoundPolicy):
     """
 
     tau: float | None = None
+    traceable = True
 
     def resolve_tau(self, strategy=None) -> float:
         tau = self.tau
@@ -203,6 +244,25 @@ class Deadline(RoundPolicy):
             rnd=rnd, round_start=clock.now, round_end=max(end, clock.now),
             reported=reported, dropped=dropped,
         )
+
+    def plan_arrays(self, dispatch_mask, t_total, *, tau=None):
+        import jax.numpy as jnp
+
+        # tau is static; a strategy-deferred tau (self.tau=None +
+        # Strategy.round_deadline_s) must be resolved by the CALLER via
+        # resolve_tau — that path is host-only and stays out of the trace
+        if tau is None:
+            tau = math.inf if self.tau is None or self.tau <= 0 else self.tau
+        if not math.isfinite(tau):
+            return SyncAll.plan_arrays(self, dispatch_mask, t_total)
+        mask = jnp.where((dispatch_mask > 0) & (t_total <= tau), 1.0, 0.0)
+        missed = jnp.max(jnp.where((dispatch_mask > 0) & (t_total > tau), 1.0, 0.0))
+        # same wall rule as plan: any straggler -> the server idles out the
+        # full tau; none -> the round ends with the last reporter
+        end = jnp.where(
+            missed > 0, tau, jnp.max(jnp.where(mask > 0, t_total, 0.0))
+        )
+        return mask, end
 
 
 @dataclass(frozen=True)

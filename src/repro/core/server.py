@@ -127,6 +127,10 @@ class Server:
     population: Any = None
     cohort_size: int | None = None
     logger: MetricsLogger = field(default_factory=lambda: MetricsLogger("server"))
+    # compiled-program memo for run_scanned: without it every call builds a
+    # fresh closure and jax.jit re-traces/re-compiles the WHOLE R-round
+    # program (sweeps and benchmarks pay full compile per run)
+    _scan_fns: dict = field(default_factory=dict, repr=False, compare=False)
 
     def run(self, global_params: PyTree, num_rounds: int) -> tuple[PyTree, History]:
         policy = self.policy if self.policy is not None else SyncAll()
@@ -206,6 +210,12 @@ class Server:
                     availability=self.availability,
                     cost_model=self.cost_model, deadline_s=deadline_cfg,
                 )
+                # heavy churn can leave the bounded redraw short — or empty.
+                # A short/empty cohort follows the legacy empty-round path
+                # below: zero dispatches, the policy still advances the
+                # clock, nothing aggregates, the round records participants=0
+                # with NaN train_loss (pinned by tests/test_population.py
+                # ::test_forced_churn_short_and_empty_cohorts)
                 client_props = {
                     cid: self.clients[cid].properties() for cid in eligible
                 }
@@ -358,6 +368,302 @@ class Server:
         # totals would silently omit exactly its stragglers' burn
         self._abandon_pending(pending, clock, history)
         return global_params, history
+
+    # ---- rounds-as-scan driver (PR 8) ----
+
+    def run_scanned(
+        self,
+        global_params: PyTree,
+        num_rounds: int,
+        *,
+        loss_fn: Callable,
+        opt,
+        spec,
+        batches,
+        weights=None,
+        step_budgets=None,
+        stacked_batches: bool = True,
+        trainable_mask: PyTree | None = None,
+        reference: bool = False,
+        donate: bool = True,
+    ) -> tuple[PyTree, History, dict]:
+        """Run ``num_rounds`` rounds as ONE compiled ``lax.scan`` over the
+        jitted engine (``rounds.make_multi_round_step``) instead of
+        re-entering python every round.
+
+        The whole run's schedule — availability churn, step jitter, cohort
+        priorities, per-client finish times — is precomputed host-side as
+        (R, C) matrices from the same seeded draws ``Server.run`` makes,
+        then the scan computes each round's dispatch mask, the policy's
+        pure-array verdict, and the round step on device; per-round
+        metrics stack on device and decode to a ``History`` once at the
+        end.  Cost accounting (energy/comm/steps) replays the CostModel's
+        arithmetic over the returned masks post-hoc, so nothing syncs
+        mid-run.  Differences from ``run``, by construction: evaluation
+        happens once, on the final global (``eval_fn`` only — a per-round
+        eval would reintroduce the per-round host sync this driver
+        removes), ``train_loss`` is the engine's weights-weighted
+        ``client_loss_mean``, and deadline stragglers are dropped rather
+        than offered a truncated step budget.
+
+        ``reference=True`` runs the SAME schedule, verdict helpers, and
+        jitted ``round_step`` through a per-round python loop with a host
+        sync each round — the bitwise-parity reference (and the rounds/sec
+        baseline ``benchmarks/scan_bench.py`` measures against).
+
+        ``batches`` leaves are (R, C, max_steps, ...) when
+        ``stacked_batches``, else (C, max_steps, ...) reused every round
+        (closed over as a scan constant — device memory stays flat in R).
+        With ``donate`` the carry buffers (global/server/client state) are
+        donated to the compiled program; inputs are copied first so the
+        caller's arrays stay valid.
+
+        Returns ``(final_global, history, stacked)`` where ``stacked`` is
+        the numpy dict of per-round device outputs (metrics plus
+        ``participation_mask``/``dispatch_mask``/``round_wall_s``/
+        ``participants``/``dispatched``).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.utils.pytree import tree_size as _tree_size
+
+        from .rounds import (
+            cohort_dispatch_mask, make_multi_round_step, make_round_step,
+        )
+
+        if self.population is not None:
+            raise NotImplementedError(
+                "run_scanned needs a static client axis; population-mode "
+                "cohort gather/scatter is host-side — use Server.run"
+            )
+        policy = self.policy if self.policy is not None else SyncAll()
+        tau = (
+            policy.resolve_tau(self.strategy)
+            if isinstance(policy, Deadline) else None
+        )
+
+        R = int(num_rounds)
+        leaf = jax.tree.leaves(batches)[0]
+        C = int(leaf.shape[1] if stacked_batches else leaf.shape[0])
+        if stacked_batches and int(leaf.shape[0]) != R:
+            raise ValueError(
+                f"stacked batches carry {int(leaf.shape[0])} rounds, "
+                f"run asked for {R}"
+            )
+        w = (
+            jnp.ones((C,), jnp.float32) if weights is None
+            else jnp.asarray(weights)
+        )
+        bud = (
+            jnp.full((C,), spec.max_steps, jnp.int32) if step_budgets is None
+            else jnp.asarray(step_budgets, jnp.int32)
+        )
+        n_params = _tree_size(global_params)
+        sched = self._scan_schedule(spec, R, C, np.asarray(bud), n_params)
+        avail = jnp.asarray(sched["avail"])
+        t_verdict = jnp.asarray(sched["t_verdict"])
+        pri = jnp.asarray(sched["pri"])
+
+        self.strategy.reset_server_state()
+        server_state = self.strategy.init_state(global_params)
+        client_state = spec.codec.init_client_state(C, n_params)
+
+        # memoize the jitted program: closures are fresh objects, so
+        # without this every call re-traces AND re-compiles the whole
+        # R-round scan (id()s are kept alive by the value tuple)
+        key = (
+            "ref" if reference else "scan", R, C, stacked_batches, donate,
+            repr(spec), repr(policy), tau, self.cohort_size,
+            id(loss_fn), id(opt), id(trainable_mask),
+        )
+        cached = self._scan_fns.get(key)
+
+        if not reference:
+            if cached is None:
+                multi = make_multi_round_step(
+                    loss_fn, opt, self.strategy, spec, R, policy=policy,
+                    tau=tau, cohort_size=self.cohort_size,
+                    trainable_mask=trainable_mask,
+                    stacked_batches=stacked_batches,
+                )
+                fn = (
+                    jax.jit(multi, donate_argnums=(0, 1, 2)) if donate
+                    else jax.jit(multi)
+                )
+                self._scan_fns[key] = (fn, (loss_fn, opt, trainable_mask))
+            else:
+                fn = cached[0]
+            if donate:
+                # donated buffers alias in-place across the scan carry —
+                # copy first so the CALLER's arrays stay valid
+                global_params = jax.tree.map(jnp.array, global_params)
+            g, _, _, stacked = fn(
+                global_params, server_state, client_state, batches, w, bud,
+                avail, t_verdict, pri,
+            )
+            stacked = jax.device_get(stacked)
+        else:
+            if cached is None:
+                round_step = jax.jit(make_round_step(
+                    loss_fn, opt, self.strategy, spec, trainable_mask
+                ))
+                self._scan_fns[key] = (
+                    round_step, (loss_fn, opt, trainable_mask)
+                )
+            else:
+                round_step = cached[0]
+            g, ss, cs = global_params, server_state, client_state
+            rows = []
+            for r in range(R):
+                if self.cohort_size is None:
+                    dispatch_mask = avail[r]
+                else:
+                    dispatch_mask = cohort_dispatch_mask(
+                        pri[r], avail[r], self.cohort_size
+                    )
+                mask, round_end = policy.plan_arrays(
+                    dispatch_mask, t_verdict[r], tau=tau
+                )
+                batch_r = (
+                    jax.tree.map(lambda x: x[r], batches)
+                    if stacked_batches else batches
+                )
+                g, ss, cs, met = round_step(
+                    g, ss, cs, batch_r, w, bud, jnp.int32(r + 1), mask
+                )
+                # the python driver's defining cost: one host round-trip
+                # per round (Server.run pulls metrics exactly like this)
+                rows.append(jax.device_get({
+                    **met,
+                    "participation_mask": mask,
+                    "dispatch_mask": dispatch_mask,
+                    "round_wall_s": round_end,
+                    "participants": jnp.sum(jnp.where(mask > 0, 1.0, 0.0)),
+                    "dispatched": jnp.sum(
+                        jnp.where(dispatch_mask > 0, 1.0, 0.0)
+                    ),
+                }))
+            stacked = {
+                k: np.stack([row[k] for row in rows]) for k in rows[0]
+            }
+
+        eval_final = (
+            self._evaluate(g) if self.eval_fn is not None else None
+        )
+        history = self._decode_scan_history(
+            stacked, sched, np.asarray(bud), eval_final
+        )
+        self.logger.log(
+            "scanned", rounds=R, driver="python" if reference else "scan",
+            loss=history.rounds[-1].train_loss if history.rounds else -1.0,
+            wall_s=history.total_time_s,
+        )
+        return g, history, stacked
+
+    def _scan_schedule(
+        self, spec, R: int, C: int, budgets: np.ndarray, n_params: int
+    ) -> dict:
+        """Host-side precompute of the whole run's (R, C) schedule.
+
+        Rows reuse the exact per-round seeded draws ``run`` makes
+        (``available``/``step_jitter`` stacked), plus stream-4 cohort
+        priorities; finish times come from ``CostModel.fleet_time_matrix``
+        (same arithmetic as ``client_round_cost``).  ``t_verdict`` is the
+        float32 copy both drivers schedule against — the verdict must be
+        computed at ONE precision or scanned/reference could disagree on
+        a client landing exactly at tau.
+        """
+        rounds = range(1, R + 1)
+        trace = self.availability
+        if trace is None:
+            avail = np.ones((R, C), np.float32)
+            jitter = np.ones((R, C), np.float64)
+        else:
+            avail = trace.available_matrix(rounds)
+            jitter = trace.step_jitter_matrix(rounds)
+        if self.cohort_size is not None:
+            pri_trace = trace if trace is not None else AvailabilityTrace.full(C)
+            pri = pri_trace.cohort_priority_matrix(rounds)
+        else:
+            pri = np.zeros((R, C), np.float32)
+        out = {"avail": avail, "pri": pri, "cols": None, "t_compute": None}
+        if self.cost_model is None:
+            out["t_verdict"] = np.zeros((R, C), np.float32)
+            return out
+        up = CostModel.fleet_uplink_bytes(spec.codec, n_params, C)
+        cols = self.cost_model.fleet_columns(C, uplink_bytes=up)
+        t_compute = (
+            (np.asarray(budgets, np.float64) * cols["step_time_s"])[None, :]
+            * jitter
+        )
+        out["cols"] = cols
+        out["t_compute"] = t_compute
+        out["t_verdict"] = np.asarray(
+            t_compute + cols["t_comm_s"][None, :], np.float32
+        )
+        return out
+
+    def _decode_scan_history(
+        self, stacked: dict, sched: dict, budgets: np.ndarray, eval_final
+    ) -> History:
+        """Stacked device outputs -> History, once, after the run.
+
+        Energy replays ``_outcome_energy``'s rules vectorized: reporters
+        charge full compute+comm plus idle burn until round end; deadline-
+        dropped dispatches charge ``wasted_energy``'s phase split
+        (downlink radio, then compute, then uplink radio) within the round
+        window; comm charges the downlink per dispatch and the codec wire
+        uplink per reporter.
+        """
+        R, C = stacked["participation_mask"].shape
+        cm = self.cost_model
+        cols = sched["cols"]
+        history = History()
+        for r in range(R):
+            reported = stacked["participation_mask"][r] > 0
+            dispatched = stacked["dispatch_mask"][r] > 0
+            wall = float(stacked["round_wall_s"][r])
+            energy, comm = 0.0, 0
+            if cm is not None:
+                t_compute = sched["t_compute"][r]
+                t_total = t_compute + cols["t_comm_s"]
+                e_total = (
+                    t_compute * cols["active_power_w"]
+                    + cols["t_comm_s"] * cm.comm_power_w
+                )
+                idle = (
+                    np.clip(wall - t_total, 0.0, None) * cols["idle_power_w"]
+                )
+                t_down = cols["t_down_s"]
+                wasted = np.where(
+                    wall >= t_total,
+                    e_total,
+                    np.minimum(wall, t_down) * cm.comm_power_w
+                    + np.clip(wall - t_down, 0.0, t_compute)
+                    * cols["active_power_w"]
+                    + np.clip(wall - t_down - t_compute, 0.0, None)
+                    * cm.comm_power_w,
+                )
+                per_client = np.where(reported, e_total + idle, wasted)
+                energy = float(np.sum(per_client[dispatched]))
+                comm = int(
+                    cm.update_bytes * int(dispatched.sum())
+                    + np.sum(cols["up_bytes"][reported])
+                )
+            eval_loss = eval_acc = None
+            if r == R - 1 and eval_final is not None:
+                eval_loss, eval_acc = eval_final
+            history.add(RoundRecord(
+                rnd=r + 1,
+                train_loss=float(stacked["client_loss_mean"][r]),
+                eval_loss=eval_loss, eval_acc=eval_acc, wall_time_s=wall,
+                energy_j=energy, comm_bytes=comm,
+                steps=int(np.sum(budgets[dispatched])),
+                participants=int(reported.sum()),
+                dropped=int(dispatched.sum() - reported.sum()),
+            ))
+        return history
 
     def _abandon_pending(self, pending, clock, history) -> None:
         for a in pending:

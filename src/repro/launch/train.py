@@ -46,6 +46,9 @@ def main() -> None:
                     help="cutoff step budget per round (0 = no cutoff)")
     ap.add_argument("--codec", default="fp32", choices=("fp32", "int8", "topk"),
                     help="uplink wire codec for the compressed round path")
+    ap.add_argument("--scan", action="store_true",
+                    help="compile the whole run into one lax.scan "
+                         "(Server.run_scanned) instead of the per-round loop")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -64,10 +67,7 @@ def main() -> None:
     steps = args.epochs * args.steps_per_epoch
     codec = {"fp32": NullCodec(), "int8": Int8Codec(),
              "topk": TopKCodec(frac=0.01)}[args.codec]
-    round_step = jax.jit(make_round_step(
-        model.loss_fn, sgd(args.lr), strategy,
-        RoundSpec(max_steps=steps, execution_mode="parallel", codec=codec),
-    ))
+    spec = RoundSpec(max_steps=steps, execution_mode="parallel", codec=codec)
 
     cost = CostModel(
         profiles=[PROFILES[AWS_DEVICE_FARM[i % len(AWS_DEVICE_FARM)]]
@@ -75,14 +75,11 @@ def main() -> None:
         update_bytes=tree_bytes(params),
     )
 
-    server_state = strategy.init_state(params)
-    client_state = codec.init_client_state(args.clients, tree_size(params))
     weights = jnp.ones((args.clients,), jnp.float32)
     budget = args.tau_steps if args.tau_steps > 0 else steps
     budgets = jnp.full((args.clients,), budget, jnp.int32)
-    uplink = codec.wire_bytes([tree_size(params)] * args.clients)
 
-    for rnd in range(1, args.rounds + 1):
+    def round_batch(rnd: int):
         batch = lm_round_batch(
             n_clients=args.clients, steps=steps, batch_size=args.batch,
             seq_len=args.seq, vocab_size=cfg.vocab_size,
@@ -97,6 +94,39 @@ def main() -> None:
             batch["frontend"] = rng.normal(
                 size=(args.clients, steps, args.batch, cfg.frontend_tokens, fd)
             ).astype(np.float32)
+        return batch
+
+    if args.scan:
+        # rounds-as-scan: the SAME per-round batches, stacked (R, C, ...),
+        # one compiled program for the whole run, History decoded at the end
+        from repro.core import Server
+
+        stacked = jax.tree.map(
+            lambda *xs: np.stack(xs),
+            *[round_batch(r) for r in range(1, args.rounds + 1)],
+        )
+        srv = Server(strategy=strategy, clients=[], cost_model=cost)
+        srv.logger.quiet = True
+        _, hist, _ = srv.run_scanned(
+            params, args.rounds, loss_fn=model.loss_fn, opt=sgd(args.lr),
+            spec=spec, batches=stacked, weights=weights, step_budgets=budgets,
+        )
+        for rec in hist.rounds:
+            logger.log(
+                "round", rnd=rec.rnd, loss=rec.train_loss, steps=rec.steps,
+                wall_s=rec.wall_time_s, energy_kj=rec.energy_j / 1e3,
+            )
+        print(f"final loss: {hist.rounds[-1].train_loss:.4f}")
+        return
+
+    round_step = jax.jit(make_round_step(model.loss_fn, sgd(args.lr),
+                                         strategy, spec))
+    server_state = strategy.init_state(params)
+    client_state = codec.init_client_state(args.clients, tree_size(params))
+    uplink = codec.wire_bytes([tree_size(params)] * args.clients)
+
+    for rnd in range(1, args.rounds + 1):
+        batch = round_batch(rnd)
         params, server_state, client_state, metrics = round_step(
             params, server_state, client_state, batch, weights, budgets, rnd
         )

@@ -5,6 +5,7 @@ pure-functional and jit-compatible unless noted.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, Callable
 
 import jax
@@ -105,7 +106,8 @@ def tree_unflatten_from_vector(vec: jnp.ndarray, like: PyTree) -> PyTree:
     leaves, treedef = jax.tree.flatten(like)
     out, off = [], 0
     for leaf in leaves:
-        n = int(np.prod(leaf.shape))
+        # shapes are static: math.prod keeps host numpy out of the traced body
+        n = math.prod(leaf.shape)
         out.append(vec[off : off + n].reshape(leaf.shape).astype(leaf.dtype))
         off += n
     return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,80 @@
+"""Benchmark-driver drift gate (ISSUE 8 satellite).
+
+The benchmark entry points call the library through its public signatures
+but are not imported by anything else, so they silently rot when those
+signatures move.  This module pins them: every driver must import, and the
+cheap paths must run against the CURRENT library — a signature change that
+breaks a bench now fails here, not in a release-week CI artifact.
+"""
+import importlib
+import json
+import sys
+
+import numpy as np
+import pytest
+
+
+@pytest.mark.parametrize("mod", [
+    "benchmarks.run",
+    "benchmarks.paper_tables",
+    "benchmarks.roofline_report",
+    "benchmarks.scan_bench",
+    "benchmarks.compression_bench",
+    "benchmarks.population_bench",
+    "benchmarks.straggler_bench",
+])
+def test_benchmark_module_imports(mod):
+    importlib.import_module(mod)
+
+
+def test_run_smoke_microbenches(capsys):
+    """``benchmarks.run --smoke`` exercises make_round_step, the
+    aggregation oracle, and the int8 quantizer against live signatures."""
+    from benchmarks import run as bench_run
+
+    argv, sys.argv = sys.argv, ["run.py", "--smoke"]
+    try:
+        bench_run.main()
+    finally:
+        sys.argv = argv
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.strip().splitlines() if ln]
+    assert lines[0] == "name,us_per_call,derived"
+    names = [ln.split(",")[0] for ln in lines[1:]]
+    assert any(n.startswith("fl_round_step") for n in names)
+    assert any(n.startswith("fedavg_reduce") for n in names)
+    assert any(n.startswith("quantize_int8") for n in names)
+    # --smoke skips the paper tables (minutes of training)
+    assert not any(n.startswith("table") for n in names)
+
+
+def test_paper_tables_one_cell():
+    """One tiny cell of table2a end-to-end through Server.run — the bench
+    that trains must still agree with the Server/Strategy signatures."""
+    from benchmarks.paper_tables import table2a
+
+    rows = table2a(rounds=1, epochs_grid=(1,))
+    assert len(rows) == 1
+    label, acc, mins, kj = rows[0]
+    assert label == "E=1"
+    assert 0.0 <= acc <= 1.0
+    assert mins > 0 and kj > 0
+
+
+def test_roofline_render_matches_dryrun_fields(tmp_path):
+    """The report reads exactly the field names dryrun emits; a renamed
+    field shows up here as a KeyError instead of a broken EXPERIMENTS.md."""
+    from benchmarks.roofline_report import render
+
+    row = {
+        "arch": "qwen3-0.6b", "shape": "train_4k", "mesh": "16x16",
+        "per_device_gb": 3.21, "compute_ms": 12.5, "memory_ms": 4.2,
+        "collective_ms": 1.7, "dominant": "compute",
+        "useful_flops_frac": 0.61,
+    }
+    path = tmp_path / "dryrun_results.json"
+    path.write_text(json.dumps([row]))
+    table = render(str(path))
+    assert "| qwen3-0.6b | train_4k | 3.21 | 12.5 | 4.2 | 1.7 | compute | 0.61 |" in table
+    # missing cells render as pending, not crash
+    assert "(pending)" in table

@@ -229,10 +229,11 @@ def test_mixed_round_matches_manual_group_combination():
     deltas = jax.vmap(lambda p: tree_flatten_to_vector(p) - flat_global)(new_params)
     total = jnp.zeros_like(flat_global)
     for g, cc, idx in codec.groups():
+        ia = jnp.asarray(idx)  # groups() yields static python index lists
         mean_g, _ = cc.aggregate_batch(
-            deltas[idx], w[idx], cc.init_client_state(len(idx), flat_global.size)
+            deltas[ia], w[ia], cc.init_client_state(len(idx), flat_global.size)
         )
-        total = total + mean_g * jnp.sum(w[idx])
+        total = total + mean_g * jnp.sum(w[ia])
     exp = flat_global + total / jnp.sum(w)
     np.testing.assert_allclose(   # atol: jit-vs-eager local-training noise
         np.asarray(tree_flatten_to_vector(p_mixed)), np.asarray(exp),

@@ -383,3 +383,65 @@ def test_cost_model_profile_for_population():
     assert cm.profile_for(0) is PIXEL_4 and cm.profile_for(1) is PIXEL_2
     legacy = CostModel(profiles=[PIXEL_4, PIXEL_2], update_bytes=1)
     assert legacy.profile_for(2) is PIXEL_4  # round-robin unchanged
+
+
+# ---------------- forced churn: short / empty cohorts ----------------
+def test_forced_churn_short_and_empty_cohorts():
+    """ISSUE-8 regression: heavy churn leaving the bounded cohort redraw
+    short — or EMPTY — must follow the legacy empty-round path, never
+    crash.  Every round is recorded; an empty round dispatches nothing,
+    aggregates nothing (NaN train_loss, participants == 0, zero
+    energy/comm), and the virtual clock keeps moving."""
+    profiles = [PIXEL_4, PIXEL_3, PIXEL_2, PIXEL_4]
+    pop = Population.from_profiles(profiles)
+    m, params, factory = _server_fixture(pop)
+    # every profile is battery-powered: mobile_dropout=1.0 downs the WHOLE
+    # fleet every round — the all-empty worst case
+    dead = AvailabilityTrace.from_profiles(
+        pop, seed=0, mobile_dropout=1.0, plugged_dropout=1.0
+    )
+    cm = CostModel(profiles=[], update_bytes=40_000, population=pop)
+    srv = Server(
+        strategy=FedAvg(local_epochs=1),
+        clients=LazyClientPool(pop, factory, capacity=8),
+        cost_model=cm, population=pop, cohort_size=C, availability=dead,
+    )
+    srv.logger.quiet = True
+    g, hist = srv.run(params, num_rounds=3)
+    assert len(hist.rounds) == 3
+    for rec in hist.rounds:
+        assert rec.participants == 0 and rec.dropped == 0
+        assert np.isnan(rec.train_loss)
+        assert rec.energy_j == 0.0 and rec.comm_bytes == 0
+        assert rec.steps == 0
+    # nothing aggregated: the global is bitwise the init
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # moderate churn: SHORT cohorts (0 < k < cohort_size) mix with empty
+    # ones; aggregation happens exactly on the rounds with participants
+    m2, params2, factory2 = _server_fixture(pop)
+    flaky = AvailabilityTrace.from_profiles(
+        pop, seed=3, mobile_dropout=0.7, plugged_dropout=0.7
+    )
+    srv2 = Server(
+        strategy=FedAvg(local_epochs=1),
+        clients=LazyClientPool(pop, factory2, capacity=8),
+        cost_model=cm, population=pop, cohort_size=C, availability=flaky,
+    )
+    srv2.logger.quiet = True
+    g2, hist2 = srv2.run(params2, num_rounds=8)
+    parts = [rec.participants for rec in hist2.rounds]
+    assert len(parts) == 8
+    assert any(0 < p < C for p in parts), f"no short cohort in {parts}"
+    for rec in hist2.rounds:
+        if rec.participants == 0:
+            assert np.isnan(rec.train_loss) and rec.comm_bytes == 0
+        else:
+            assert np.isfinite(rec.train_loss) and rec.comm_bytes > 0
+    # training actually happened on the non-empty rounds
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(g2), jax.tree.leaves(params2))
+    )
+    assert changed == (sum(parts) > 0)

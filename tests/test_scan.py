@@ -1,0 +1,320 @@
+"""Rounds-as-scan (ISSUE 8): the whole training run as one ``lax.scan``.
+
+Acceptance criteria asserted here:
+- ``Server.run_scanned`` is BITWISE equal to R iterations of the per-round
+  python driver (``reference=True``) — final global params, every stacked
+  device output, and the decoded ``History`` — for NullCodec, Int8, TopK,
+  and a Deadline policy whose participation mask is provably non-trivial
+  (churn + stragglers actually drop clients);
+- on-device cohort sampling (``cohort_dispatch_mask``) matches the same
+  seeded priorities drawn host-side;
+- carry donation keeps compiled temp memory FLAT in R (peak memory must
+  not scale with the number of rounds when batches are reused);
+- non-traceable policies (``BufferedAsync``) are rejected at build time.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AvailabilityTrace, BufferedAsync, Deadline, FedAvg, PROFILES, RoundSpec,
+    Server, SyncAll, cohort_dispatch_mask, make_multi_round_step,
+)
+from repro.core.compression import Int8Codec, NullCodec, TopKCodec
+from repro.core.cost_model import CostModel
+from repro.models import build_model
+from repro.optim import sgd
+from repro.utils.pytree import tree_size
+
+# a mixed fleet: one fast chip, two mid edge boards, three slow phones —
+# under a deadline the phones straggle, under churn the mobiles drop out
+FLEET = [
+    "tpu-v5e-chip", "jetson-tx2-gpu", "jetson-tx2-gpu",
+    "pixel-2", "pixel-2", "pixel-3",
+]
+C = len(FLEET)
+
+
+def _fixture(codec, *, R=6, steps=2, B=4, seed=0):
+    model = build_model("mobilenet-head-office31")
+    params = model.init(jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    batches = {
+        "x": jnp.asarray(rng.normal(
+            size=(R, C, steps, B, model.cfg.feature_dim)).astype(np.float32)),
+        "y": jnp.asarray(rng.integers(
+            0, model.cfg.num_classes, (R, C, steps, B)).astype(np.int32)),
+    }
+    spec = RoundSpec(max_steps=steps, execution_mode="parallel", codec=codec)
+    cm = CostModel(
+        profiles=[PROFILES[n] for n in FLEET],
+        update_bytes=4 * tree_size(params),
+    )
+    # tau between the fast chip's and the phones' round time: real drops
+    tau = 1.25 * cm.client_round_cost(1, steps).t_total_s
+    trace = AvailabilityTrace.from_profiles(
+        [PROFILES[n] for n in FLEET], seed=seed,
+        mobile_dropout=0.3, jitter_std=0.1,
+    )
+    return model, params, batches, spec, cm, tau, trace
+
+
+def _run_both(codec, *, cohort_size=None, R=6, seed=0):
+    model, params, batches, spec, cm, tau, trace = _fixture(
+        codec, R=R, seed=seed
+    )
+    out = {}
+    for ref in (False, True):
+        srv = Server(
+            strategy=FedAvg(), clients=[], cost_model=cm,
+            policy=Deadline(tau=tau), availability=trace,
+            cohort_size=cohort_size,
+        )
+        srv.logger.quiet = True
+        out[ref] = srv.run_scanned(
+            params, R, loss_fn=model.loss_fn, opt=sgd(0.1), spec=spec,
+            batches=batches, reference=ref,
+        )
+    return out[False], out[True]
+
+
+def _assert_tree_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_history_equal(ha, hb):
+    assert len(ha.rounds) == len(hb.rounds)
+    for ra, rb in zip(ha.rounds, hb.rounds):
+        assert ra.rnd == rb.rnd
+        assert ra.train_loss == rb.train_loss  # bitwise, not approx
+        assert ra.wall_time_s == rb.wall_time_s
+        assert ra.energy_j == rb.energy_j
+        assert ra.comm_bytes == rb.comm_bytes
+        assert ra.steps == rb.steps
+        assert ra.participants == rb.participants
+        assert ra.dropped == rb.dropped
+
+
+# ---------------- bitwise parity: scan == python driver ----------------
+@pytest.mark.parametrize("name,codec,cohort", [
+    ("null", NullCodec(), None),
+    ("int8", Int8Codec(), None),
+    ("topk", TopKCodec(frac=0.05), 4),
+], ids=["null", "int8", "topk-cohort"])
+def test_scanned_matches_python_driver_bitwise(name, codec, cohort):
+    (g_s, h_s, st_s), (g_p, h_p, st_p) = _run_both(codec, cohort_size=cohort)
+    _assert_tree_bitwise(g_s, g_p)
+    assert set(st_s) == set(st_p)
+    for k in st_s:
+        np.testing.assert_array_equal(
+            np.asarray(st_s[k]), np.asarray(st_p[k]), err_msg=k
+        )
+    _assert_history_equal(h_s, h_p)
+
+
+def test_deadline_mask_is_nontrivial():
+    """The parity fixture must actually exercise the mask: churn + the
+    deadline drop SOME clients in SOME rounds, and keep others."""
+    (_, hist, stacked), _ = _run_both(NullCodec())
+    dropped = sum(r.dropped for r in hist.rounds)
+    participants = sum(r.participants for r in hist.rounds)
+    assert dropped > 0, "fixture never dropped a client - mask is trivial"
+    assert participants > 0, "fixture dropped everyone - mask is trivial"
+    mask = stacked["participation_mask"]
+    disp = stacked["dispatch_mask"]
+    assert mask.shape == disp.shape == (len(hist.rounds), C)
+    assert np.any(mask < disp)  # a dispatched straggler missed tau
+
+
+def test_cohort_mask_counts_and_availability():
+    """On-device cohort sampling picks exactly cohort_size available
+    clients (fewer only when churn leaves fewer available)."""
+    (_, hist, stacked), _ = _run_both(TopKCodec(frac=0.05), cohort_size=4)
+    disp = stacked["dispatch_mask"]
+    for r, row in enumerate(disp):
+        assert row.sum() <= 4
+    assert np.any(disp.sum(axis=1) == 4)  # some full cohorts exist
+    # reporters are always a subset of the dispatched cohort
+    assert np.all((stacked["participation_mask"] > 0) <= (disp > 0))
+
+
+def test_cohort_dispatch_mask_unit():
+    pri = jnp.asarray([0.3, 0.1, 0.9, 0.2, 0.5])
+    avail = jnp.asarray([1.0, 1.0, 1.0, 0.0, 1.0])
+    m = np.asarray(cohort_dispatch_mask(pri, avail, 2))
+    # two lowest priorities among AVAILABLE clients: ids 1 (0.1) and 0 (0.3)
+    np.testing.assert_array_equal(m, [1.0, 1.0, 0.0, 0.0, 0.0])
+    # cohort larger than the available fleet: everyone available, nobody else
+    m2 = np.asarray(cohort_dispatch_mask(pri, avail, 5))
+    np.testing.assert_array_equal(m2, [1.0, 1.0, 1.0, 0.0, 1.0])
+
+
+# ---------------- pure-array policy verdicts ----------------
+def test_plan_arrays_matches_deadline_semantics():
+    t = jnp.asarray([1.0, 30.0, 5.0, 2.0])
+    disp = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    mask, end = Deadline(tau=10.0).plan_arrays(disp, t, tau=10.0)
+    np.testing.assert_array_equal(np.asarray(mask), [1.0, 0.0, 1.0, 0.0])
+    assert float(end) == 10.0  # a straggler exists: wait the full cutoff
+    # no stragglers: round ends with the last reporter, not the cutoff
+    mask2, end2 = Deadline(tau=10.0).plan_arrays(
+        disp, jnp.asarray([1.0, 6.0, 5.0, 2.0]), tau=10.0
+    )
+    np.testing.assert_array_equal(np.asarray(mask2), [1.0, 1.0, 1.0, 0.0])
+    assert float(end2) == 6.0
+    # infinite tau degrades to SyncAll
+    mask3, end3 = Deadline().plan_arrays(disp, t, tau=float("inf"))
+    np.testing.assert_array_equal(np.asarray(mask3), np.asarray(disp))
+    assert float(end3) == 30.0
+    sm, se = SyncAll().plan_arrays(disp, t)
+    np.testing.assert_array_equal(np.asarray(sm), np.asarray(disp))
+    assert float(se) == 30.0
+
+
+def test_buffered_async_is_rejected_at_build_time():
+    assert not BufferedAsync().traceable
+    model = build_model("mobilenet-head-office31")
+    spec = RoundSpec(max_steps=2, execution_mode="parallel")
+    with pytest.raises(NotImplementedError, match="BufferedAsync"):
+        make_multi_round_step(
+            model.loss_fn, sgd(0.1), FedAvg(), spec, 4,
+            policy=BufferedAsync(),
+        )
+    with pytest.raises(NotImplementedError):
+        BufferedAsync().plan_arrays(jnp.ones((2,)), jnp.ones((2,)))
+
+
+def test_run_scanned_rejects_population_mode():
+    model = build_model("mobilenet-head-office31")
+    params = model.init(jax.random.key(0))
+    srv = Server(strategy=FedAvg(), clients=[], population=object(),
+                 cohort_size=2)
+    with pytest.raises(NotImplementedError, match="population"):
+        srv.run_scanned(
+            params, 2, loss_fn=model.loss_fn, opt=sgd(0.1),
+            spec=RoundSpec(max_steps=1, execution_mode="parallel"),
+            batches={"x": jnp.zeros((2, 2, 1, 1))},
+        )
+
+
+# ---------------- donation: memory flat in R ----------------
+def test_donated_scan_memory_does_not_scale_with_rounds():
+    """Compiled temp memory at R=32 must match R=8: the scan carry is
+    donated/aliased in place, per-round metrics are the only O(R) device
+    output, and reused batches are a closed-over constant."""
+    model = build_model("mobilenet-head-office31")
+    params = model.init(jax.random.key(0))
+    steps, B = 2, 4
+    rng = np.random.default_rng(0)
+    batch = {
+        "x": jnp.asarray(rng.normal(
+            size=(C, steps, B, model.cfg.feature_dim)).astype(np.float32)),
+        "y": jnp.asarray(rng.integers(
+            0, model.cfg.num_classes, (C, steps, B)).astype(np.int32)),
+    }
+    spec = RoundSpec(max_steps=steps, execution_mode="parallel")
+    strat = FedAvg()
+    w = jnp.ones((C,))
+    bud = jnp.full((C,), steps, jnp.int32)
+    cs = spec.codec.init_client_state(C, tree_size(params))
+    temp = {}
+    for R in (8, 32):
+        multi = make_multi_round_step(
+            model.loss_fn, sgd(0.1), strat, spec, R, stacked_batches=False
+        )
+        sched = (jnp.ones((R, C), jnp.float32),
+                 jnp.zeros((R, C), jnp.float32),
+                 jnp.zeros((R, C), jnp.float32))
+        compiled = jax.jit(multi, donate_argnums=(0, 1, 2)).lower(
+            params, strat.init_state(params), cs, batch, w, bud, *sched
+        ).compile()
+        ma = compiled.memory_analysis()
+        if ma is None:
+            pytest.skip("backend does not expose memory_analysis")
+        temp[R] = int(ma.temp_size_in_bytes)
+    assert temp[32] <= temp[8] * 1.05, (
+        f"temp memory scales with R: {temp}"
+    )
+
+
+def test_reused_batches_parity_with_stacked():
+    """stacked_batches=False (one batch reused every round) must equal a
+    stack of R copies of that batch."""
+    model, params, batches, spec, cm, tau, trace = _fixture(
+        NullCodec(), R=4
+    )
+    one = jax.tree.map(lambda x: x[0], batches)
+    tiled = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (4,) + x.shape), one
+    )
+    outs = []
+    for b, stacked_flag in ((tiled, True), (one, False)):
+        srv = Server(
+            strategy=FedAvg(), clients=[], cost_model=cm,
+            policy=Deadline(tau=tau), availability=trace,
+        )
+        srv.logger.quiet = True
+        outs.append(srv.run_scanned(
+            params, 4, loss_fn=model.loss_fn, opt=sgd(0.1), spec=spec,
+            batches=b, stacked_batches=stacked_flag,
+        ))
+    (g_a, h_a, _), (g_b, h_b, _) = outs
+    _assert_tree_bitwise(g_a, g_b)
+    _assert_history_equal(h_a, h_b)
+
+
+def test_donation_keeps_caller_params_valid():
+    """run_scanned with donate=True must copy before donating: the
+    caller's param arrays stay readable and a second run from the same
+    params reproduces the first bitwise."""
+    model, params, batches, spec, cm, tau, trace = _fixture(
+        NullCodec(), R=3
+    )
+    srv = Server(strategy=FedAvg(), clients=[], cost_model=cm,
+                 policy=Deadline(tau=tau), availability=trace)
+    srv.logger.quiet = True
+    kw = dict(loss_fn=model.loss_fn, opt=sgd(0.1), spec=spec,
+              batches=batches)
+    g1, h1, _ = srv.run_scanned(params, 3, **kw)
+    # caller buffers survived donation
+    _ = [np.asarray(x) for x in jax.tree.leaves(params)]
+    g2, h2, _ = srv.run_scanned(params, 3, **kw)
+    _assert_tree_bitwise(g1, g2)
+    _assert_history_equal(h1, h2)
+
+
+# ---------------- schedule precompute matrices ----------------
+def test_schedule_matrices_match_per_round_draws():
+    trace = AvailabilityTrace.from_profiles(
+        [PROFILES[n] for n in FLEET], seed=3,
+        mobile_dropout=0.4, jitter_std=0.2,
+    )
+    rounds = range(1, 9)
+    am = trace.available_matrix(rounds)
+    jm = trace.step_jitter_matrix(rounds)
+    assert am.shape == jm.shape == (8, C)
+    for i, r in enumerate(rounds):
+        np.testing.assert_array_equal(am[i], np.asarray(trace.available(r)))
+        np.testing.assert_array_equal(jm[i], np.asarray(trace.step_jitter(r)))
+    pm = trace.cohort_priority_matrix(rounds)
+    assert pm.shape == (8, C)
+    # priorities are fresh draws per round, uniform in [0, 1)
+    assert np.all((pm >= 0.0) & (pm < 1.0))
+    assert not np.array_equal(pm[0], pm[1])
+
+
+def test_fleet_time_matrix_matches_client_round_cost():
+    cm = CostModel(profiles=[PROFILES[n] for n in FLEET],
+                   update_bytes=1 << 20)
+    steps = 5
+    budgets = np.full((C,), steps, np.int64)
+    jitter = np.linspace(0.8, 1.2, 8 * C).reshape(8, C)
+    tm = cm.fleet_time_matrix(budgets, jitter)
+    for r in (0, 7):
+        for cid in range(C):
+            ref = cm.client_round_cost(cid, steps, jitter=float(jitter[r, cid]))
+            assert tm[r, cid] == ref.t_total_s, (r, cid)
