@@ -29,6 +29,14 @@ Five sections, CSV rows like benchmarks/run.py:
    every single-codec fleet baseline, with a guard that the mixed fleet
    ships strictly less wire than the uncompressed one and that the TopK
    group is never densified.
+7. ``lora[...]``    — the structured-update frontier: per-client wire for
+   ``LoRACodec`` over a rank sweep at FULL LLM param counts (qwen3-0.6b +
+   the MoE mixtral-8x7b, shapes via ``jax.eval_shape``), then the
+   accuracy-vs-wire run on the reduced LM: final eval loss under
+   fp32/int8/lora next to the uplink each cost.  Results land in
+   ``BENCH_lora.json``.  Guards (every mode): LoRA wire < dense Int8 at
+   every rank in the sweep; the training run reaches >= 10x less wire
+   than Int8 at a final loss within 5% (this PR's acceptance bar).
 
   PYTHONPATH=src python -m benchmarks.compression_bench [--fast|--smoke]
 
@@ -354,6 +362,75 @@ def bench_mixed_fleet(fast: bool) -> list[str]:
     return rows
 
 
+# ---------------------------------------------------------------- section 7
+def bench_lora_frontier(rounds: int, smoke: bool,
+                        out: str = "BENCH_lora.json") -> list[str]:
+    """LoRA accuracy-vs-wire frontier + the >= 10x acceptance guard."""
+    import json
+
+    from repro.core import LoRACodec, SegmentMap
+
+    rows, frontier = [], []
+    # wire at FULL LLM scale: abstract shapes only, nothing allocated
+    for arch in ("qwen3-0.6b", "mixtral-8x7b"):
+        m = build_model(arch)
+        shapes = jax.eval_shape(m.init, jax.random.key(0))
+        segs = SegmentMap.from_tree(shapes)
+        n = segs.n_params
+        int8_w = Int8Codec().with_segments(segs).wire_bytes(n)
+        fp32_w = CODECS["fp32"].wire_bytes(n)
+        for rank in (1, 4, 16, 64):
+            lora_w = LoRACodec(rank=rank, factor_codec=Int8Codec()) \
+                .with_segments(segs).wire_bytes(n)
+            assert lora_w < int8_w, (
+                f"{arch} r{rank}: lora wire {lora_w} >= int8 {int8_w}"
+            )
+            rows.append(
+                f"lora[{arch}/r{rank}],0,bytes={lora_w};"
+                f"vs_int8={int8_w / lora_w:.1f}x;vs_fp32={fp32_w / lora_w:.1f}x"
+            )
+            frontier.append({"arch": arch, "rank": rank, "n_params": n,
+                             "lora_bytes": lora_w, "int8_bytes": int8_w,
+                             "fp32_bytes": fp32_w})
+
+    # accuracy-vs-wire on the reduced LM: the acceptance run
+    m, params, train, eval_batch = _lm_setup()
+    segs = SegmentMap.from_tree(params)
+    n = tree_size(params)
+    runs = {}
+    for name, codec in (
+        ("fp32", CODECS["fp32"]),
+        ("int8", Int8Codec().with_segments(segs)),
+        ("lora_r4", LoRACodec(rank=4, factor_codec=Int8Codec())
+            .with_segments(segs)),
+    ):
+        t0 = time.perf_counter()
+        loss, uplink = _run_rounds(m, params, train, eval_batch, codec, rounds)
+        us = (time.perf_counter() - t0) * 1e6
+        wire = codec.wire_bytes(n)
+        runs[name] = {"eval_loss": loss, "wire_bytes": wire,
+                      "uplink_bytes": uplink}
+        rows.append(
+            f"lora[qwen3_reduced/{name}],{us:.0f},"
+            f"eval_loss={loss:.4f};wire_bytes={wire};uplink_bytes={uplink}"
+        )
+
+    with open(out, "w") as f:
+        json.dump({"bench": "lora", "rounds": rounds, "smoke": smoke,
+                   "frontier": frontier, "runs": runs}, f, indent=2,
+                  default=float)
+    rows.append(f"lora[json],0,wrote={out}")
+
+    # acceptance: >= 10x less wire than dense Int8 at matched final loss
+    ratio = runs["int8"]["wire_bytes"] / runs["lora_r4"]["wire_bytes"]
+    assert ratio >= 10.0, f"lora wire only {ratio:.1f}x under int8"
+    li, ll = runs["int8"]["eval_loss"], runs["lora_r4"]["eval_loss"]
+    assert abs(ll - li) <= 0.05 * abs(li), (
+        f"lora loss {ll:.4f} not matched to int8 {li:.4f}"
+    )
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -377,6 +454,8 @@ def main() -> None:
     for row in check_sparse_path_selected():
         print(row)
     for row in bench_mixed_fleet(args.fast or args.smoke):
+        print(row)
+    for row in bench_lora_frontier(rounds, smoke=args.smoke):
         print(row)
 
 

@@ -99,6 +99,34 @@ def bench_compression() -> list[str]:
     return [f"quantize_int8_1M,{us:.0f},GBps={(x.size*4)/(us/1e6)/1e9:.1f}"]
 
 
+def bench_structured_wire() -> list[str]:
+    """Leafwise structured-update drift gate: segment the reduced LM's
+    params, push one update through the LoRA factor wire, and report the
+    reduction vs dense Int8 (guards the segmented codec entry points)."""
+    from repro.configs.base import get_config
+    from repro.core import Int8Codec, LoRACodec, SegmentMap
+    from repro.models import build_model
+    from repro.utils.pytree import tree_flatten_to_vector, tree_size
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    segs = SegmentMap.from_tree(params)
+    n = tree_size(params)
+    lora = LoRACodec(rank=4, factor_codec=Int8Codec()).with_segments(segs)
+    vec = 0.01 * tree_flatten_to_vector(params)
+    enc = jax.jit(lora.encode_structured)(vec)
+    us = _timeit(lambda v: lora.decode_structured(lora.encode_structured(v)),
+                 vec, n=3)
+    int8_w = Int8Codec().with_segments(segs).wire_bytes(n)
+    lora_w = lora.wire_bytes(n)
+    assert lora_w < int8_w and len(enc.payloads) == len(segs)
+    return [
+        f"structured_lora_roundtrip_{len(segs)}segs,{us:.0f},"
+        f"wire_bytes={lora_w};vs_int8={int8_w / lora_w:.1f}x"
+    ]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -112,6 +140,8 @@ def main() -> None:
     for row in bench_aggregation_kernel():
         print(row)
     for row in bench_compression():
+        print(row)
+    for row in bench_structured_wire():
         print(row)
     if not args.smoke:
         for row in bench_paper_tables(args.fast):

@@ -9,6 +9,13 @@ a class that itself defines ``wire_bytes`` or ``_wire_bytes_scalar``.  If
 such a subclass overrides ``encode``/``decode``/``encode_batch``/
 ``decode_batch`` but defines neither ``wire_bytes`` nor
 ``_wire_bytes_scalar``, it is flagged.
+
+The segmented surface carries the same contract per segment: a codec that
+overrides ``encode_segment``/``decode_segment`` changes what one segment's
+wire carries, and the base ``segment_wire_bytes`` (which bills the *flat*
+format at ``seg.size``) silently mis-costs it — so such an override must
+restate ``segment_wire_bytes`` (flat ``wire_bytes`` does not discharge
+this: the segmented billing path never calls it).
 """
 from __future__ import annotations
 
@@ -17,6 +24,8 @@ from ..core import Finding, Project
 NAME = "wire-accounting"
 WIRE_METHODS = ("wire_bytes", "_wire_bytes_scalar")
 CODEC_METHODS = ("encode", "decode", "encode_batch", "decode_batch")
+SEGMENT_WIRE_METHODS = ("segment_wire_bytes",)
+SEGMENT_CODEC_METHODS = ("encode_segment", "decode_segment")
 
 
 def _class_index(project: Project):
@@ -63,5 +72,20 @@ def check(project: Project) -> list[Finding]:
                     f"{'/'.join(overridden)} but inherits wire_bytes — "
                     "the cost model will bill the parent's wire format; "
                     "override wire_bytes or _wire_bytes_scalar",
+                ))
+            seg_overridden = [
+                m for m in SEGMENT_CODEC_METHODS if m in cls.methods
+            ]
+            if seg_overridden and not any(
+                m in cls.methods for m in SEGMENT_WIRE_METHODS
+            ):
+                findings.append(Finding(
+                    NAME, mod.path, cls.node.lineno, cls.name,
+                    "segment-wire-bytes-not-overridden",
+                    f"codec {cls.name} overrides "
+                    f"{'/'.join(seg_overridden)} but inherits "
+                    "segment_wire_bytes — the segmented billing path will "
+                    "cost the parent's per-segment wire format; override "
+                    "segment_wire_bytes",
                 ))
     return findings

@@ -19,7 +19,8 @@ from .rounds import (
     make_round_step,
 )
 from .compression import (
-    UpdateCodec, Int8Codec, TopKCodec, NullCodec, MixedCodec,
+    UpdateCodec, Int8Codec, TopKCodec, NullCodec, MixedCodec, LoRACodec,
+    Segment, SegmentMap, StructuredUpdate,
     BandwidthCodecPolicy, compress_update, decompress_update,
 )
 from .population import CohortState, LazyClientPool, Population

@@ -72,9 +72,10 @@ class Client:
         Server never re-samples a busy client)."""
 
     def export_state(self):
-        """Round-to-round carry as one flat fp32 row, or None if there is
-        none — what ``LazyClientPool`` spills into a ``CohortState`` when
-        it evicts this client (core/population.py's eviction contract)."""
+        """Round-to-round carry as one flat fp32 row (or, for a segmented
+        codec, a tuple of per-segment rows), or None if there is none —
+        what ``LazyClientPool`` spills into a ``CohortState`` when it
+        evicts this client (core/population.py's eviction contract)."""
         return None
 
     def import_state(self, state) -> None:
@@ -122,10 +123,23 @@ class JaxClient(Client):
         self._residual = self._residual_prev
 
     def export_state(self):
-        return None if self._residual is None else np.asarray(self._residual)
+        if self._residual is None:
+            return None
+        if isinstance(self._residual, tuple):  # segmented: leafwise rows
+            return tuple(
+                r if isinstance(r, tuple) else np.asarray(r)
+                for r in self._residual
+            )
+        return np.asarray(self._residual)
 
     def import_state(self, state) -> None:
-        row = jnp.asarray(state, jnp.float32)
+        if isinstance(state, (tuple, list)):  # segmented: leafwise rows
+            row = tuple(
+                r if isinstance(r, tuple) else jnp.asarray(r, jnp.float32)
+                for r in state
+            )
+        else:
+            row = jnp.asarray(state, jnp.float32)
         self._residual = row
         # the rollback point is the rehydrated row: a discard_update right
         # after re-materialization must be a no-op, not a reset to None
@@ -241,7 +255,19 @@ class JaxClient(Client):
             # feedback residual) and ship the actual wire payload
             n_params = tree_size(params)
             residual = self._residual
-            if residual is None or residual.shape != (n_params,):
+            if codec.segments is not None:
+                # segmented carry is a tuple of per-segment rows; anything
+                # else (fresh client, codec switch) re-inits inside
+                # compress_update
+                if not isinstance(residual, tuple) or len(residual) != len(
+                    codec.segments
+                ):
+                    residual = None
+            elif (
+                residual is None
+                or isinstance(residual, tuple)
+                or residual.shape != (n_params,)
+            ):
                 residual = jnp.zeros((n_params,), jnp.float32)
             enc, self._residual = compress_update(
                 codec, params, ins.parameters, residual=residual

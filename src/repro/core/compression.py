@@ -10,9 +10,76 @@ shrink the client->server payload that the cost model charges for:
   compression).  Server-side aggregation is O(C·k): the (idx, val) payloads
   feed the scatter-accumulate kernel directly (see the O(C·k) reduce
   contract below) — the dense (C, n_params) delta matrix is never built.
+- ``LoRACodec``: low-rank factor wire for matrix-shaped segments — the
+  structure-aware codec that makes LLM-scale federated fine-tuning fit the
+  paper's smartphone uplink numbers (see the LoRA wire format below).
 - ``NullCodec``: identity fp32 wire — the uncompressed baseline with the
   same interface, and the *default* codec of ``RoundSpec``, so the round
   engine has exactly one code path.
+
+The segmented wire contract (``SegmentMap`` / ``StructuredUpdate``)
+-------------------------------------------------------------------
+
+Historically every codec operated on ONE flat ``(n_params,)`` fp32 vector.
+That representation is now the degenerate case of a *leafwise-segmented*
+wire:
+
+- A ``SegmentMap`` is a static tuple of ``Segment(name, shape, offset)``
+  records covering ``[0, n_params)`` contiguously — usually one segment per
+  model leaf (``SegmentMap.from_tree``), with ``SegmentMap.flat(n)`` as the
+  single-segment legacy layout.  It is frozen/hashable python data, so a
+  codec carrying one stays a valid jit-static closure constant.
+- ``codec.with_segments(segmap)`` returns a segmented copy.  With
+  ``segments=None`` (the default) every codec runs the EXACT pre-segment
+  flat code path; with a map set, the codec surface becomes per-segment:
+
+  * ``init_client_state`` returns a *tuple* of per-segment state entries
+    (``(C, seg.size)`` fp32 residual rows for stateful segments, ``()``
+    for stateless ones) instead of one ``(C, n_params)`` buffer — the
+    population layer spills/rehydrates these rows leafwise.
+  * ``encode``/``decode`` happen per segment (``encode_segment`` /
+    ``decode_segment``); the full-update payload is a ``StructuredUpdate``
+    — the segment map plus one codec payload per segment.
+  * ``transmit_tree`` works leaf-by-leaf when the map matches the delta
+    tree (a sharded/fsdp model is never flattened into one replicated
+    vector); when it does not match, the flat vector is sliced per
+    segment.
+  * ``wire_bytes`` is the sum of ``segment_wire_bytes(seg)`` — wire
+    accounting composes per segment, and a codec that changes a segment's
+    wire (LoRA) restates exactly that segment's cost.
+  * ``aggregate_batch`` reduces column-blocks per segment through the same
+    kernels as before — and because each block is ``seg.size`` wide, the
+    VMEM-budget dispatch in ``kernels/ops.py`` is consulted *per segment*:
+    a model whose total ``n_params`` exceeds ``scatter_reduce.MAX_N_PARAMS``
+    can still take the Pallas scatter path segment-by-segment.
+
+  Bitwise parity: a single-segment map (``SegmentMap.flat``) produces
+  bit-identical results to the legacy flat path for Null/Int8/TopK on all
+  three execution modes — the per-segment driver degenerates to the flat
+  code applied to the whole-vector slice (pinned in
+  ``tests/test_structured_update.py``).
+
+The LoRA wire format (``LoRACodec``)
+------------------------------------
+
+Per segment, the wire is either the low-rank factorization or the wrapped
+fallback codec:
+
+- **Matrix segments** (``len(seg.shape) >= 2``, folded to
+  ``(prod(shape[:-1]), shape[-1])``, and strictly cheaper than dense at the
+  effective rank ``r = min(rank, m, n)``): the delta block ``X`` ships as
+  PowerSGD-style factors ``A (m, r)`` (orthonormalized ``X @ q``) and
+  ``B (r, n) = A.T @ X``, each encoded by ``factor_codec`` (e.g. Int8 on
+  the factors) — ``segment_wire_bytes = factor_codec.wire_bytes(m*r) +
+  factor_codec.wire_bytes(r*n)``.  The random projection ``q`` is derived
+  from ``(seed, seg.offset)`` only, so server and clients agree on it
+  without it ever crossing the wire.  The reconstruction ``A @ B`` is what
+  the server decodes; the factorization error feeds back through the
+  per-segment residual rows, so it telescopes across rounds exactly like
+  TopK's untransmitted coordinates.
+- **Non-matrix segments** (biases, norm scales, or matrices too small to
+  win): delegate wholesale to ``fallback`` (default Int8) — encode, state,
+  and wire accounting.
 
 The O(C·k) TopK reduce contract
 -------------------------------
@@ -32,7 +99,8 @@ The O(C·k) TopK reduce contract
   ``transmit_tree`` (mesh shard_map / sequential scan) decodes one
   client's (n_params,) vector at a time, never a (C, n_params) matrix;
   ``Strategy.aggregate_fit`` scatter-reduces serialized wire payloads when
-  the whole fleet shipped TopK.
+  the whole fleet shipped TopK.  Under a segment map every bound holds
+  per segment with k = k_of(seg.size).
 - **When densify still applies**: ``decode_batch`` exists for callers that
   explicitly want the dense per-client matrix — nothing on any reduce path
   calls it.  The fused kernel additionally requires the (n_params,)
@@ -66,12 +134,18 @@ contract extends the O(C·k) reduce contract group-wise:
   contributes exactly zero, never NaNs.
 - **Per-group state**: ``init_client_state`` returns a *tuple* pytree, one
   entry per bank codec — residual rows only for the groups whose codec
-  carries error feedback ((C_g, n_params) fp32), ``()`` for Null groups —
-  carried opaquely through the uniform ``round_step`` signature on the
+  carries error feedback ((C_g, n_params) fp32 flat, or the per-segment
+  tuple for a segmented group codec), ``()`` for Null groups — carried
+  opaquely through the uniform ``round_step`` signature on the
   vmap-parallel and sequential paths alike.
+- **Segment maps thread through group construction**: bank codecs may be
+  segmented (``MixedCodec.with_segments`` maps the whole bank) — a LoRA
+  group and an Int8 group coexist in one fleet.  Codecs carrying
+  *different* explicit maps are rejected at build time (the client axis
+  shares one model, so there is exactly one valid leaf layout).
 - **Per-group wire accounting**: ``wire_bytes`` returns one uplink size
-  per client (the codec its group ships), which is what
-  ``CostModel.round_costs`` charges a mixed fleet.
+  per client (the codec its group ships, segmented codecs included),
+  which is what ``CostModel.round_costs`` charges a mixed fleet.
 - The mesh shard_map path is NOT supported for ``MixedCodec`` (an SPMD
   program cannot run a different wire format per device);
   ``make_round_step`` rejects the combination at build time.
@@ -82,8 +156,9 @@ the full surface the engine and protocol layer program against:
 
 - ``init_client_state(n_clients, n_params)`` — the codec-owned per-client
   state pytree carried across rounds by ``round_step``.  Error-feedback
-  codecs return a (C, n_params) fp32 residual buffer; ``NullCodec`` returns
-  an empty pytree (no state is allocated for the uncompressed wire).
+  codecs return fp32 residual rows ((C, n_params) flat, or a per-segment
+  tuple under a segment map); ``NullCodec`` returns an empty pytree (no
+  state is allocated for the uncompressed wire).
 - ``aggregate_batch(deltas, weights, state)`` — the batched (C, N) path
   used inside the jitted parallel round step: fold the residual in, encode,
   reduce straight off the *encoded* payload (for Int8 the fused
@@ -96,13 +171,17 @@ the full surface the engine and protocol layer program against:
   sharded models never round-trip through a flat replicated vector.
 - ``wire_payload(enc)`` / ``from_wire(payload)`` — the exact arrays that
   cross the wire (Int8 trims encoder padding; the receiver re-pads), used
-  by the protocol layer's ``CompressedParameters`` serialization.
+  by the protocol layer's ``CompressedParameters`` serialization.  Under a
+  segment map the per-segment hooks ``segment_wire_payload`` /
+  ``segment_from_wire`` serialize each ``StructuredUpdate`` payload; the
+  protocol layer namespaces the fields ``s{i}.<key>``.
 - ``wire_bytes(n)`` — the per-client uplink charge; accepts an int or a
   vector of per-client sizes so ``CostModel.round_costs`` can account for
   a heterogeneous fleet where every client ships a different payload.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from contextlib import contextmanager
 from dataclasses import dataclass
@@ -123,6 +202,123 @@ from repro.utils.pytree import (
 PyTree = Any
 
 
+# ---------------- segment map: the static leaf layout of an update ----------------
+@dataclass(frozen=True)
+class Segment:
+    """One contiguous span of the flat update: a leaf's shape at an offset.
+
+    Static python data (hashable): codecs carry segments as jit-closure
+    constants, so every field is a plain int/str/tuple.
+    """
+
+    name: str
+    shape: tuple
+    offset: int
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(d) for d in self.shape))
+        object.__setattr__(self, "offset", int(self.offset))
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape) if self.shape else 1
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def matrix_shape(self) -> tuple:
+        """The 2-D view structured codecs factorize: leading axes fold into
+        rows — (..., m, n) -> (prod(leading) * m, n).  A stacked-expert MoE
+        leaf (E, d_in, d_out) is E matrices sharing the output basis, which
+        is exactly the fold a low-rank factorization wants."""
+        assert self.ndim >= 2, f"segment {self.name!r} has no matrix view"
+        return (math.prod(self.shape[:-1]), int(self.shape[-1]))
+
+
+@dataclass(frozen=True)
+class SegmentMap:
+    """A static, contiguous tuple of ``Segment``s covering [0, n_params).
+
+    ``flat(n)`` is the single-segment legacy layout; ``from_tree`` builds
+    one segment per model leaf in ``tree_flatten`` order (the same order
+    ``tree_flatten_to_vector`` concatenates), so offsets line up with the
+    flat vector bitwise.
+    """
+
+    segments: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "segments", tuple(self.segments))
+        off = 0
+        for seg in self.segments:
+            assert seg.offset == off, (
+                f"segment {seg.name!r} at offset {seg.offset}, expected {off}"
+                " — segments must tile the flat vector contiguously"
+            )
+            off += seg.size
+
+    @classmethod
+    def flat(cls, n_params: int) -> "SegmentMap":
+        return cls((Segment("flat", (n_params,), 0),))
+
+    @classmethod
+    def from_tree(cls, tree: PyTree) -> "SegmentMap":
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        segs, off = [], 0
+        for path, leaf in flat:
+            seg = Segment(jax.tree_util.keystr(path) or "leaf", tuple(leaf.shape), off)
+            segs.append(seg)
+            off += seg.size
+        return cls(tuple(segs))
+
+    @property
+    def n_params(self) -> int:
+        return sum(s.size for s in self.segments)
+
+    def __iter__(self):
+        return iter(self.segments)
+
+    def __len__(self) -> int:
+        return len(self.segments)
+
+    def __getitem__(self, i):
+        return self.segments[i]
+
+    def matches_leaves(self, leaves) -> bool:
+        """Do these pytree leaves line up 1:1 with the segments (same count,
+        same shapes, tree_flatten order)?  When true, segmented codecs work
+        leaf-by-leaf and never build the flat (n_params,) vector."""
+        return len(leaves) == len(self.segments) and all(
+            tuple(leaf.shape) == seg.shape
+            for leaf, seg in zip(leaves, self.segments)
+        )
+
+    def split(self, vec: jnp.ndarray):
+        """Slice a flat (n_params,) vector into per-segment vectors."""
+        return [vec[s.offset : s.offset + s.size] for s in self.segments]
+
+
+@dataclass(frozen=True, eq=False)
+class StructuredUpdate:
+    """A segmented wire payload: one codec payload per segment.
+
+    Registered as a pytree (segments are static aux data), so it crosses
+    jit boundaries and ``jax.tree`` transforms transparently.
+    """
+
+    segments: SegmentMap
+    payloads: tuple
+
+
+jax.tree_util.register_pytree_node(
+    StructuredUpdate,
+    lambda su: (su.payloads, su.segments),
+    lambda segs, payloads: StructuredUpdate(segs, tuple(payloads)),
+)
+
+
 class UpdateCodec:
     """Base codec: error-feedback residual state + flat-vector wire.
 
@@ -130,12 +326,53 @@ class UpdateCodec:
     batched variants, ``reduce``, ``_wire_bytes_scalar``); the state and
     transport machinery below is shared.  ``NullCodec`` overrides the state
     hooks to be stateless/identity.
+
+    With ``segments`` set (see the module docstring's segmented wire
+    contract) the public surface dispatches per segment through the
+    ``*_segment`` hooks; their defaults apply the flat wire format to each
+    segment's slice, so Null/Int8/TopK are segment-ready without further
+    overrides and a single flat segment reproduces the legacy path bitwise.
     """
+
+    # dataclass subclasses redeclare this as a field; plain access must work
+    segments: SegmentMap | None = None
+
+    def with_segments(self, segments: SegmentMap) -> "UpdateCodec":
+        """A copy of this codec bound to a static segment map."""
+        if dataclasses.is_dataclass(self):
+            return dataclasses.replace(self, segments=segments)
+        raise TypeError(f"{type(self).__name__} cannot carry a segment map")
+
+    def segment_map(self, n_params: int | None = None) -> SegmentMap:
+        if self.segments is not None:
+            if n_params is not None:
+                assert self.segments.n_params == n_params, (
+                    f"{type(self).__name__} segment map covers "
+                    f"{self.segments.n_params} params, caller has {n_params}"
+                )
+            return self.segments
+        assert n_params is not None, "flat codec needs n_params for a map"
+        return SegmentMap.flat(n_params)
 
     # ---- per-client state (carried by round_step across rounds) ----
     def init_client_state(self, n_clients: int, n_params: int) -> PyTree:
-        """Zero error-feedback state: one flat fp32 residual per client."""
+        """Zero error-feedback state: one flat fp32 residual per client, or
+        (under a segment map) a tuple of per-segment residual rows."""
+        if self.segments is not None:
+            self.segment_map(n_params)
+            return tuple(
+                self.init_segment_state(n_clients, seg) for seg in self.segments
+            )
+        return self._init_flat_state(n_clients, n_params)
+
+    def _init_flat_state(self, n_clients: int, n_params: int) -> PyTree:
         return jnp.zeros((n_clients, n_params), jnp.float32)
+
+    def init_segment_state(self, n_clients: int, seg: Segment) -> PyTree:
+        return self._init_flat_state(n_clients, seg.size)
+
+    def segment_stateful(self, seg: Segment) -> bool:
+        return bool(jax.tree_util.tree_leaves(self.init_segment_state(1, seg)))
 
     def carries_client_state(self, n_params: int = 1) -> bool:
         """Whether this codec owns round-to-round per-client state.
@@ -145,6 +382,8 @@ class UpdateCodec:
         dense residual row per sampled client.  Probes a one-client state
         rather than trusting subclasses to remember a flag.
         """
+        if self.segments is not None:
+            n_params = self.segments.n_params
         return bool(jax.tree_util.tree_leaves(
             self.init_client_state(1, n_params)
         ))
@@ -156,12 +395,49 @@ class UpdateCodec:
     ):
         """Full aggregation of vmapped client params -> (avg params, state).
 
-        Default: flatten per-client deltas to the (C, n_params) wire layout
-        and aggregate off the encoded payload (``aggregate_batch``).
+        Default (flat): flatten per-client deltas to the (C, n_params) wire
+        layout and aggregate off the encoded payload (``aggregate_batch``).
         ``NullCodec`` overrides this leafwise so the uncompressed engine
         never materializes the flat fp32 matrix.
+
+        Segmented: when the map matches the model leaves, each leaf's
+        (C, seg.size) delta block aggregates independently — the full
+        (C, n_params) concat is never built; otherwise the flat matrix is
+        sliced per segment (bitwise-equal column spans).
         """
+        if self.segments is None:
+            flat_global = tree_flatten_to_vector(global_params)
+            deltas = jax.vmap(
+                lambda p: tree_flatten_to_vector(p) - flat_global
+            )(client_params)
+            avg_delta, new_state = self.aggregate_batch(deltas, weights, state)
+            return (
+                tree_unflatten_from_vector(flat_global + avg_delta, global_params),
+                new_state,
+            )
+
+        segs = self.segment_map()
+        leaves_g, treedef = jax.tree_util.tree_flatten(global_params)
+        new_state = list(state)
+        if segs.matches_leaves(leaves_g):
+            leaves_c = jax.tree_util.tree_flatten(client_params)[0]
+            new_leaves = []
+            for i, (seg, lc, lg) in enumerate(zip(segs, leaves_c, leaves_g)):
+                c = lc.shape[0]
+                block = (
+                    lc.astype(jnp.float32).reshape(c, -1)
+                    - lg.astype(jnp.float32).reshape(-1)
+                )
+                mean_i, new_state[i] = self.aggregate_segment_batch(
+                    block, weights, state[i], seg
+                )
+                new_leaves.append(
+                    (lg.astype(jnp.float32) + mean_i.reshape(lg.shape)).astype(lg.dtype)
+                )
+            return jax.tree_util.tree_unflatten(treedef, new_leaves), tuple(new_state)
+
         flat_global = tree_flatten_to_vector(global_params)
+        self.segment_map(flat_global.shape[0])
         deltas = jax.vmap(
             lambda p: tree_flatten_to_vector(p) - flat_global
         )(client_params)
@@ -176,12 +452,35 @@ class UpdateCodec:
 
         Error feedback in, encode, reduce off the encoded payload; what was
         not transmitted becomes the next residual, so the compression error
-        telescopes across rounds instead of accumulating.
+        telescopes across rounds instead of accumulating.  Under a segment
+        map, each segment's column block reduces independently through
+        ``aggregate_segment_batch`` (the per-segment sizes are what the
+        kernel dispatch's VMEM budget sees).
         """
+        if self.segments is None:
+            return self._aggregate_batch_flat(deltas, weights, state)
+        segs = self.segment_map(deltas.shape[1])
+        parts, new_state = [], list(state)
+        for i, seg in enumerate(segs):
+            part, new_state[i] = self.aggregate_segment_batch(
+                deltas[:, seg.offset : seg.offset + seg.size], weights, state[i], seg
+            )
+            parts.append(part)
+        return jnp.concatenate(parts), tuple(new_state)
+
+    def _aggregate_batch_flat(self, deltas, weights, state):
         eff = deltas + state
         enc = self.encode_batch(eff)
         new_state = eff - self.decode_batch(enc)
         return self.reduce(enc, weights), new_state
+
+    def aggregate_segment_batch(self, deltas, weights, state, seg: Segment):
+        """One segment's (C, seg.size) block -> (mean (seg.size,), new state).
+
+        Default: the flat wire format applied to the block — which is why a
+        single flat segment is bitwise the legacy path.
+        """
+        return self._aggregate_batch_flat(deltas, weights, state)
 
     # ---- per-client surface: mesh shard_map region / sequential scan ----
     def transmit_tree(self, delta_tree: PyTree, state_row):
@@ -189,12 +488,74 @@ class UpdateCodec:
 
         The returned tree contains exactly the information that survives the
         wire (encode -> decode); the caller aggregates it, so only codec-
-        representable values ever cross the slow inter-pod links.
+        representable values ever cross the slow inter-pod links.  Under a
+        segment map matching the tree, each leaf transmits on its own — a
+        sharded model never round-trips through one replicated flat vector.
         """
-        vec = tree_flatten_to_vector(delta_tree) + state_row
-        enc = self.encode(vec)
-        dec = self.decode(enc)
-        return tree_unflatten_from_vector(dec, delta_tree), vec - dec
+        if self.segments is None:
+            vec = tree_flatten_to_vector(delta_tree)
+            seg = Segment("flat", (vec.shape[0],), 0)
+            dec, new_row = self.transmit_segment(vec, state_row, seg)
+            return tree_unflatten_from_vector(dec, delta_tree), new_row
+
+        segs = self.segment_map()
+        leaves, treedef = jax.tree_util.tree_flatten(delta_tree)
+        if segs.matches_leaves(leaves):
+            decs, rows = [], []
+            for leaf, row, seg in zip(leaves, state_row, segs):
+                dec, new_row = self.transmit_segment(
+                    leaf.astype(jnp.float32).reshape(-1), row, seg
+                )
+                decs.append(dec.reshape(leaf.shape).astype(leaf.dtype))
+                rows.append(new_row)
+            return jax.tree_util.tree_unflatten(treedef, decs), tuple(rows)
+
+        vec = tree_flatten_to_vector(delta_tree)
+        self.segment_map(vec.shape[0])
+        decs, rows = [], []
+        for part, row, seg in zip(segs.split(vec), state_row, segs):
+            dec, new_row = self.transmit_segment(part, row, seg)
+            decs.append(dec.reshape(-1))
+            rows.append(new_row)
+        return (
+            tree_unflatten_from_vector(jnp.concatenate(decs), delta_tree),
+            tuple(rows),
+        )
+
+    def transmit_segment(self, vec: jnp.ndarray, state_row, seg: Segment):
+        """One client's uplink for ONE segment: (vec (seg.size,), row) ->
+        (decoded (seg.size,), new row).  ``state_row`` is ``()`` for a
+        stateless segment."""
+        stateful = not isinstance(state_row, tuple)
+        eff = vec + state_row if stateful else vec
+        enc = self.encode_segment(eff, seg)
+        dec = self.decode_segment(enc, seg)
+        return dec, (eff - dec if stateful else ())
+
+    # ---- per-segment wire hooks (defaults: the flat format per slice) ----
+    def encode_segment(self, vec: jnp.ndarray, seg: Segment):
+        return self.encode(vec)
+
+    def decode_segment(self, enc, seg: Segment) -> jnp.ndarray:
+        return self.decode(enc)
+
+    def encode_structured(self, delta_vec: jnp.ndarray) -> StructuredUpdate:
+        """Flat (n_params,) delta -> per-segment payloads (protocol path)."""
+        segs = self.segment_map(int(delta_vec.shape[0]))
+        return StructuredUpdate(
+            segs,
+            tuple(
+                self.encode_segment(part, seg)
+                for part, seg in zip(segs.split(delta_vec), segs)
+            ),
+        )
+
+    def decode_structured(self, su: StructuredUpdate) -> jnp.ndarray:
+        """Dense (n_params,) fp32 decode of a ``StructuredUpdate``."""
+        return jnp.concatenate([
+            self.decode_segment(p, seg).reshape(-1).astype(jnp.float32)
+            for seg, p in zip(su.segments, su.payloads)
+        ])
 
     # ---- wire serialization hooks (protocol.CompressedParameters) ----
     def wire_payload(self, enc) -> dict:
@@ -205,16 +566,39 @@ class UpdateCodec:
         """Rebuild the decodable payload from ``wire_payload`` fields."""
         return dict(payload)
 
+    def segment_wire_payload(self, payload, seg: Segment) -> dict:
+        """Wire fields for ONE segment's payload (protocol layer namespaces
+        them ``s{i}.<key>``)."""
+        return self.wire_payload(payload)
+
+    def segment_from_wire(self, fields: dict, seg: Segment):
+        return self.from_wire(fields)
+
     # ---- uplink accounting ----
     def _wire_bytes_scalar(self, n_params: int) -> int:
         raise NotImplementedError
+
+    def segment_wire_bytes(self, seg: Segment) -> int:
+        """Uplink bytes for ONE segment (the flat format on its slice by
+        default; structure-aware codecs restate this per segment)."""
+        return self._wire_bytes_scalar(seg.size)
 
     def wire_bytes(self, n_params):
         """Uplink bytes for an ``n_params``-sized update.
 
         Accepts an int (homogeneous fleet) or a sequence of per-client sizes
         (heterogeneous accounting) and returns an int or list respectively.
+        Under a segment map the scalar is the sum of per-segment wire sizes.
         """
+        if self.segments is not None:
+            total = sum(self.segment_wire_bytes(seg) for seg in self.segments)
+            if isinstance(n_params, (list, tuple, np.ndarray)):
+                ns = np.asarray(n_params).reshape(-1)
+                for n in ns:
+                    self.segment_map(int(n))
+                return [total] * len(ns)
+            self.segment_map(int(n_params))
+            return total
         if isinstance(n_params, (list, tuple, np.ndarray)):
             return [self._wire_bytes_scalar(int(n)) for n in np.asarray(n_params).reshape(-1)]
         return self._wire_bytes_scalar(int(n_params))
@@ -230,10 +614,12 @@ class NullCodec(UpdateCodec):
     weighted reduce of the uncompressed engine.
     """
 
+    segments: Any = None
+
     def _wire_bytes_scalar(self, n_params: int) -> int:
         return 4 * n_params
 
-    def init_client_state(self, n_clients: int, n_params: int) -> PyTree:
+    def _init_flat_state(self, n_clients: int, n_params: int) -> PyTree:
         return ()
 
     def aggregate_updates(self, client_params, global_params, weights, state):
@@ -251,13 +637,15 @@ class NullCodec(UpdateCodec):
             )
             return (gf + acc / wsum).astype(g.dtype)
 
-        return jax.tree.map(leaf_mean, client_params, global_params), ()
+        # state passes through unchanged (() flat; a tuple of ()s segmented)
+        # so the scan carry keeps one stable structure across rounds
+        return jax.tree.map(leaf_mean, client_params, global_params), state
 
-    def aggregate_batch(self, deltas, weights, state):
-        return self.reduce(self.encode_batch(deltas), weights), ()
+    def _aggregate_batch_flat(self, deltas, weights, state):
+        return self.reduce(self.encode_batch(deltas), weights), state
 
     def transmit_tree(self, delta_tree, state_row):
-        return delta_tree, ()
+        return delta_tree, state_row
 
     def encode(self, delta_vec: jnp.ndarray):
         return {"delta": delta_vec.astype(jnp.float32), "n": delta_vec.shape[0]}
@@ -278,6 +666,7 @@ class NullCodec(UpdateCodec):
 @dataclass(frozen=True)
 class Int8Codec(UpdateCodec):
     block: int = 256
+    segments: Any = None
 
     def _n_scales(self, n_params: int) -> int:
         return -(-n_params // self.block)  # ceil: encode pads to a block multiple
@@ -365,9 +754,13 @@ class TopKCodec(UpdateCodec):
       ``decode_batch`` remains the explicit densify fallback for callers
       that want the per-client dense matrix (nothing on the reduce or
       error-feedback path does).
+    - under a segment map each segment keeps its own k = k_of(seg.size)
+      coordinates, and the scatter kernel's VMEM-budget dispatch sees
+      seg.size — not the whole model — per reduce call.
     """
 
     frac: float = 0.01
+    segments: Any = None
 
     def k_of(self, n_params: int) -> int:
         # math.floor, not int(): n_params is static, but this method is
@@ -414,7 +807,7 @@ class TopKCodec(UpdateCodec):
             .add(enc["val"])
         )
 
-    def aggregate_batch(self, deltas: jnp.ndarray, weights: jnp.ndarray, state):
+    def _aggregate_batch_flat(self, deltas: jnp.ndarray, weights: jnp.ndarray, state):
         """O(C·k) end to end: encode, scatter-reduce straight off the
         payload, and zero the transmitted coordinates out of the error-
         feedback state — TopK transmits exact values, so
@@ -425,20 +818,203 @@ class TopKCodec(UpdateCodec):
         new_state = eff.at[rows, enc["idx"]].set(0.0)
         return self.reduce(enc, weights), new_state
 
-    def transmit_tree(self, delta_tree: PyTree, state_row):
+    def transmit_segment(self, vec: jnp.ndarray, state_row, seg: Segment):
         """Per-client path (mesh shard_map / sequential scan): the decode
-        stays per-client (N,) — never (C, N) — and the next state row zeroes
-        the transmitted coordinates in O(k)."""
-        vec = tree_flatten_to_vector(delta_tree) + state_row
-        enc = self.encode(vec)
-        new_row = vec.at[enc["idx"]].set(0.0)
-        return tree_unflatten_from_vector(self.decode(enc), delta_tree), new_row
+        stays per-client (seg.size,) — never (C, N) — and the next state
+        row zeroes the transmitted coordinates in O(k)."""
+        eff = vec + state_row
+        enc = self.encode_segment(eff, seg)
+        new_row = eff.at[enc["idx"]].set(0.0)
+        return self.decode_segment(enc, seg), new_row
 
     def reduce(self, enc, weights: jnp.ndarray, *, interpret: bool = False):
         # sparse scatter-accumulate straight off the (idx, val) payload
         return ops.topk_scatter_reduce(
             enc["idx"], enc["val"], weights, enc["n"], interpret=interpret
         )
+
+
+@dataclass(frozen=True)
+class LoRACodec(UpdateCodec):
+    """Low-rank factor wire for matrix segments; fallback codec elsewhere.
+
+    The wire format is documented in the module docstring ("The LoRA wire
+    format").  Config:
+
+    - ``rank``: the rank budget; each matrix segment uses the effective
+      rank ``min(rank, m, n)`` of its folded ``matrix_shape``.
+    - ``factor_codec``: the codec applied to each factor's flat vector on
+      the wire (``Int8Codec`` composes int8 quantization on the factors;
+      ``NullCodec`` ships fp32 factors).
+    - ``fallback``: the codec that owns non-matrix segments wholesale —
+      encode, per-segment state, and wire accounting all delegate.
+    - ``power_iters``: subspace iterations of the PowerSGD-style
+      factorization (1 = project, orthonormalize, project back).
+    - ``seed``: the deterministic projection seed; the per-segment key is
+      ``fold_in(key(seed), seg.offset)``, shared by every client and the
+      server, so the random basis never crosses the wire.
+
+    This codec is segment-structured by construction: build it with a
+    ``SegmentMap`` (``LoRACodec(...).with_segments(SegmentMap.from_tree(params))``).
+    The flat-vector surface raises — there is no meaningful rank structure
+    in one anonymous flat vector.
+    """
+
+    rank: int = 8
+    factor_codec: UpdateCodec = NullCodec()
+    fallback: UpdateCodec = Int8Codec()
+    power_iters: int = 1
+    seed: int = 0
+    segments: Any = None
+
+    def __post_init__(self):
+        assert self.rank >= 1, f"rank must be >= 1, got {self.rank}"
+        assert self.power_iters >= 1
+        assert self.factor_codec.segments is None, "factor_codec is flat-per-factor"
+        assert self.fallback.segments is None, "fallback inherits LoRA's segments"
+
+    # ---- which segments get the low-rank wire ----
+    def _eff_rank(self, seg: Segment) -> int:
+        m, n = seg.matrix_shape
+        return min(self.rank, m, n)
+
+    def _use_lora(self, seg: Segment) -> bool:
+        """Low-rank wins when the segment has a matrix view and the factor
+        wire is strictly smaller than the dense fallback wire."""
+        if seg.ndim < 2:
+            return False
+        m, n = seg.matrix_shape
+        r = min(self.rank, m, n)
+        return (
+            self.factor_codec._wire_bytes_scalar(m * r)
+            + self.factor_codec._wire_bytes_scalar(r * n)
+            < self.fallback.segment_wire_bytes(seg)
+        )
+
+    def _seg_key(self, seg: Segment):
+        return jax.random.fold_in(jax.random.key(self.seed), seg.offset)
+
+    # ---- the factorization (PowerSGD-style, deterministic basis) ----
+    def _factorize(self, x: jnp.ndarray, key):
+        """(m, n) fp32 -> A (m, r) orthonormal, B (r, n) = A.T @ x."""
+        m, n = x.shape
+        r = min(self.rank, m, n)
+        q = jax.random.normal(key, (n, r), jnp.float32)
+        p = x @ q
+        for _ in range(self.power_iters - 1):
+            p = jnp.linalg.qr(p)[0]
+            p = x @ (x.T @ p)
+        a = jnp.linalg.qr(p)[0]
+        return a, a.T @ x
+
+    # ---- per-segment wire ----
+    def encode_segment(self, vec: jnp.ndarray, seg: Segment):
+        if not self._use_lora(seg):
+            return self.fallback.encode_segment(vec, seg)
+        m, n = seg.matrix_shape
+        a, b = self._factorize(
+            vec.reshape(m, n).astype(jnp.float32), self._seg_key(seg)
+        )
+        return {
+            "a": self.factor_codec.encode(a.reshape(-1)),
+            "b": self.factor_codec.encode(b.reshape(-1)),
+        }
+
+    def decode_segment(self, enc, seg: Segment) -> jnp.ndarray:
+        if not self._use_lora(seg):
+            return self.fallback.decode_segment(enc, seg)
+        m, n = seg.matrix_shape
+        r = self._eff_rank(seg)
+        a = self.factor_codec.decode(enc["a"]).reshape(m, r)
+        b = self.factor_codec.decode(enc["b"]).reshape(r, n)
+        return (a @ b).reshape(-1)
+
+    # ---- per-segment state: residual rows on lora segments, fallback's otherwise ----
+    def init_segment_state(self, n_clients: int, seg: Segment) -> PyTree:
+        if self._use_lora(seg):
+            return jnp.zeros((n_clients, seg.size), jnp.float32)
+        return self.fallback.init_segment_state(n_clients, seg)
+
+    # ---- batched aggregation: factorize per client, reduce reconstructions ----
+    def aggregate_segment_batch(self, deltas, weights, state, seg: Segment):
+        if not self._use_lora(seg):
+            return self.fallback.aggregate_segment_batch(deltas, weights, state, seg)
+        c = deltas.shape[0]
+        m, n = seg.matrix_shape
+        r = self._eff_rank(seg)
+        eff = deltas.astype(jnp.float32) + state
+        x = eff.reshape(c, m, n)
+        key = self._seg_key(seg)  # one shared basis: clients and server agree
+        a, b = jax.vmap(lambda xi: self._factorize(xi, key))(x)
+        # factor wire round-trip (what the server can actually see)
+        fa = self.factor_codec.decode_batch(
+            self.factor_codec.encode_batch(a.reshape(c, m * r))
+        ).reshape(c, m, r)
+        fb = self.factor_codec.decode_batch(
+            self.factor_codec.encode_batch(b.reshape(c, r * n))
+        ).reshape(c, r, n)
+        dec = jnp.einsum("cmr,crn->cmn", fa, fb)
+        wf = weights.astype(jnp.float32)
+        mean = jnp.einsum("c,cmn->mn", wf, dec) / safe_weight_sum(wf)
+        return mean.reshape(-1), eff - dec.reshape(c, -1)
+
+    # ---- per-segment serialization: factor payloads namespaced a./b. ----
+    def segment_wire_payload(self, payload, seg: Segment) -> dict:
+        if not self._use_lora(seg):
+            return self.fallback.segment_wire_payload(payload, seg)
+        out = {}
+        for fk in ("a", "b"):
+            for k, v in self.factor_codec.wire_payload(payload[fk]).items():
+                out[f"{fk}.{k}"] = v
+        return out
+
+    def segment_from_wire(self, fields: dict, seg: Segment):
+        if not self._use_lora(seg):
+            return self.fallback.segment_from_wire(fields, seg)
+        def sub(prefix):
+            return self.factor_codec.from_wire({
+                k[len(prefix):]: v for k, v in fields.items() if k.startswith(prefix)
+            })
+        return {"a": sub("a."), "b": sub("b.")}
+
+    # ---- wire accounting: restated per segment (factors, not dense) ----
+    def segment_wire_bytes(self, seg: Segment) -> int:
+        if not self._use_lora(seg):
+            return self.fallback.segment_wire_bytes(seg)
+        m, n = seg.matrix_shape
+        r = self._eff_rank(seg)
+        return (
+            self.factor_codec._wire_bytes_scalar(m * r)
+            + self.factor_codec._wire_bytes_scalar(r * n)
+        )
+
+    # ---- the flat-vector surface is meaningless for a structured codec ----
+    def _no_flat_surface(self, name: str):
+        raise TypeError(
+            f"LoRACodec.{name}: the low-rank wire needs matrix shapes — build "
+            "the codec with a SegmentMap (with_segments(SegmentMap.from_tree(params)))"
+        )
+
+    def _wire_bytes_scalar(self, n_params: int) -> int:
+        self._no_flat_surface("wire_bytes")
+
+    def _init_flat_state(self, n_clients: int, n_params: int):
+        self._no_flat_surface("init_client_state")
+
+    def encode(self, delta_vec):
+        self._no_flat_surface("encode")
+
+    def decode(self, enc):
+        self._no_flat_surface("decode")
+
+    def encode_batch(self, deltas):
+        self._no_flat_surface("encode_batch")
+
+    def decode_batch(self, enc):
+        self._no_flat_surface("decode_batch")
+
+    def reduce(self, enc, weights, *, interpret: bool = False):
+        self._no_flat_surface("reduce")
 
 
 @dataclass(frozen=True)
@@ -460,6 +1036,12 @@ class MixedCodec(UpdateCodec):
     so callers must dispatch through ``groups()`` (the sequential round
     engine does).
 
+    Segment maps thread through group construction: bank codecs may carry
+    segment maps (``with_segments`` maps the whole bank), and each group's
+    state/encode/reduce then runs that codec's segmented path — a LoRA
+    group and an Int8 group coexist in one fleet.  Conflicting explicit
+    maps are rejected at build time.
+
     Population mode is out of scope by construction: the static
     ``assignment`` binds codecs to client-axis *slots*, while a population
     round resamples which client occupies each slot every round —
@@ -480,6 +1062,19 @@ class MixedCodec(UpdateCodec):
         object.__setattr__(self, "codecs", tuple(self.codecs))
         object.__setattr__(
             self, "assignment", tuple(int(g) for g in self.assignment)
+        )
+        maps = {c.segments for c in self.codecs if c.segments is not None}
+        if len(maps) > 1:
+            raise ValueError(
+                "MixedCodec bank codecs carry conflicting segment maps — the "
+                "client axis shares one model, so every segmented group must "
+                "use the same leaf layout (use MixedCodec.with_segments)"
+            )
+
+    def with_segments(self, segments: SegmentMap) -> "MixedCodec":
+        """Thread one segment map through every group codec in the bank."""
+        return dataclasses.replace(
+            self, codecs=tuple(c.with_segments(segments) for c in self.codecs)
         )
 
     @classmethod
@@ -531,8 +1126,9 @@ class MixedCodec(UpdateCodec):
 
         Each group's rows are gathered with static indices and aggregated by
         the group's own codec (TopK never densifies its payload, Null never
-        flattens the model); the group means are scaled back to partial
-        weighted sums and combined under one fleet-wide denominator."""
+        flattens the model, a segmented group runs its per-segment path);
+        the group means are scaled back to partial weighted sums and
+        combined under one fleet-wide denominator."""
         assert weights.shape[0] == self.n_clients, (
             f"batch carries {weights.shape[0]} clients, MixedCodec assigns "
             f"{self.n_clients}"  # a static gather would silently clamp
@@ -584,7 +1180,9 @@ class MixedCodec(UpdateCodec):
 
         Accepts an int (every client ships an ``n_params``-sized update) or
         a per-client vector of sizes; always returns a per-client list —
-        a mixed fleet has no single scalar wire size."""
+        a mixed fleet has no single scalar wire size.  Dispatches through
+        each group codec's own ``wire_bytes`` so segmented group codecs
+        (LoRA) account their structured wire correctly."""
         ns = np.asarray(n_params).reshape(-1)
         if ns.size == 1:
             ns = np.full(self.n_clients, int(ns[0]))
@@ -592,7 +1190,7 @@ class MixedCodec(UpdateCodec):
             f"per-client size vector ({len(ns)}) != clients ({self.n_clients})"
         )
         return [
-            self.codecs[g]._wire_bytes_scalar(int(n))
+            self.codecs[g].wire_bytes(int(n))
             for g, n in zip(self.assignment, ns)
         ]
 
@@ -670,14 +1268,44 @@ def ban_topk_densify():
         TopKCodec.decode_batch = orig
 
 
+def _init_residual_rows(codec, segs: SegmentMap):
+    return tuple(
+        jnp.zeros((seg.size,), jnp.float32) if codec.segment_stateful(seg) else ()
+        for seg in segs
+    )
+
+
 def compress_update(
     codec, new_params: PyTree, global_params: PyTree, residual=None
 ) -> tuple[Any, PyTree]:
     """-> (wire_payload, new_residual) for error feedback.
 
-    ``residual`` is the client's carried error-feedback vector (folded into
-    the delta before encoding); None means no carried state.
+    ``residual`` is the client's carried error-feedback state (folded into
+    the delta before encoding); None means no carried state.  Flat codecs
+    take/return one (n_params,) vector; segmented codecs take/return a
+    tuple of per-segment rows and emit a ``StructuredUpdate``.
     """
+    if codec.segments is not None:
+        segs = codec.segments
+        delta_tree = tree_sub(new_params, global_params)
+        leaves, _ = jax.tree_util.tree_flatten(delta_tree)
+        if segs.matches_leaves(leaves):
+            vecs = [leaf.astype(jnp.float32).reshape(-1) for leaf in leaves]
+        else:
+            flat = tree_flatten_to_vector(delta_tree)
+            codec.segment_map(int(flat.shape[0]))
+            vecs = segs.split(flat)
+        if residual is None:
+            residual = _init_residual_rows(codec, segs)
+        encs, new_res = [], []
+        for vec, res, seg in zip(vecs, residual, segs):
+            stateful = not isinstance(res, tuple)
+            eff = vec + res if stateful else vec
+            enc = codec.encode_segment(eff, seg)
+            encs.append(enc)
+            new_res.append(eff - codec.decode_segment(enc, seg) if stateful else ())
+        return StructuredUpdate(segs, tuple(encs)), tuple(new_res)
+
     delta = tree_flatten_to_vector(tree_sub(new_params, global_params))
     if residual is not None:
         delta = delta + residual
@@ -687,6 +1315,9 @@ def compress_update(
 
 
 def decompress_update(codec, enc, global_params: PyTree) -> PyTree:
-    delta = codec.decode(enc)
+    if isinstance(enc, StructuredUpdate):
+        delta = codec.decode_structured(enc)
+    else:
+        delta = codec.decode(enc)
     flat_global = tree_flatten_to_vector(global_params)
     return tree_unflatten_from_vector(flat_global + delta, global_params)

@@ -11,10 +11,11 @@ that scale representable without making anything per-client:
   every per-device quantity is a vectorized ``column[codes[ids]]`` gather
   over just the ids in hand, O(cohort) regardless of N.
 - ``CohortState``: the codec error-feedback residual store.  Only the
-  *sampled* cohort's rows are ever resident as a dense ``(C, n_params)``
-  array (``gather`` on dispatch, ``scatter`` on report); everything else
-  lives in a hashed (python dict) LRU spill store bounded by ``capacity``
-  rows.
+  *sampled* cohort's rows are ever resident — as a dense ``(C, n_params)``
+  array for flat codecs, or as a tuple of per-segment ``(C, seg.size)``
+  blocks for segmented codecs (``gather`` on dispatch, ``scatter`` on
+  report); everything else lives in a hashed (python dict) LRU spill store
+  bounded by ``capacity`` rows.
 - ``LazyClientPool``: a sequence-like client collection that materializes
   ``Client`` objects on demand (LRU-bounded), spilling/rehydrating their
   error-feedback carry through a ``CohortState`` so ``Server.run`` never
@@ -26,9 +27,14 @@ The resident-state contract
 Codec client state is resident **only while sampled**.  ``gather(ids)``
 densifies the cohort's rows for one jitted ``round_step`` (missing rows are
 zeros); ``scatter(ids, state)`` returns them to the spill store.  The round
-engine is unchanged shape-wise: it still sees a dense ``(C, n_params)``
-``client_state`` whose row order matches the cohort id order, and the
-participation mask / codec contracts apply verbatim (rounds.py).
+engine is unchanged shape-wise: it sees exactly the pytree the codec's
+``init_client_state`` describes — one dense ``(C, n_params)`` buffer for a
+flat codec, or per-segment ``(C, seg.size)`` blocks (``()`` for stateless
+segments) for a codec carrying a ``SegmentMap`` — with row order matching
+the cohort id order, and the participation mask / codec contracts apply
+verbatim (rounds.py).  Spilled rows are stored *leafwise* for segmented
+codecs: a multi-B fsdp model never needs one monolithic (n_params,)
+buffer per client anywhere in the store.
 
 Eviction semantics: the spill store holds at most ``capacity`` rows; beyond
 that the least-recently-sampled client's row is dropped and **eviction
@@ -168,12 +174,15 @@ class Population:
 class CohortState:
     """Resident-only-when-sampled codec client state (see module docstring).
 
-    ``gather(ids)`` -> dense ``(C, n_params)`` fp32 rows for the jitted
-    engine (``()`` for stateless codecs), zeros where a client was never
-    seen *or was evicted*; ``scatter(ids, state)`` writes the engine's
-    updated rows back into the LRU spill store.  ``get_row``/``put_row``
-    are the single-row surface ``LazyClientPool`` spills python-path
-    clients through.
+    ``gather(ids)`` -> dense cohort state for the jitted engine (``()`` for
+    stateless codecs; a ``(C, n_params)`` buffer for flat codecs; a tuple
+    of per-segment ``(C, seg.size)`` blocks for segmented codecs), zeros
+    where a client was never seen *or was evicted*; ``scatter(ids, state)``
+    writes the engine's updated rows back into the LRU spill store.
+    ``get_row``/``put_row`` are the single-row surface ``LazyClientPool``
+    spills python-path clients through — for a segmented codec a row is a
+    tuple of per-segment fp32 vectors (``()`` entries for stateless
+    segments), never one monolithic (n_params,) buffer.
     """
 
     def __init__(self, codec, n_params: int, *, capacity: int = 4096):
@@ -190,19 +199,49 @@ class CohortState:
         self.stateless = (
             codec is None or not codec.carries_client_state(self.n_params)
         )
-        self._rows: OrderedDict[int, np.ndarray] = OrderedDict()
+        self.segments = getattr(codec, "segments", None)
+        if self.segments is not None:
+            assert self.segments.n_params == self.n_params, (
+                f"codec segment map covers {self.segments.n_params} params, "
+                f"store built for {self.n_params}"
+            )
+            self._seg_stateful = tuple(
+                codec.segment_stateful(seg) for seg in self.segments
+            )
+        self._rows: OrderedDict[int, Any] = OrderedDict()
         self.evictions = 0
 
+    def _pack_row(self, row):
+        """Normalize a row to the spill representation: one (n_params,)
+        fp32 vector for flat codecs; a tuple of per-segment vectors
+        (leafwise, ``()`` for stateless segments) for segmented codecs —
+        a flat vector is accepted and split for convenience."""
+        if self.segments is None:
+            return np.asarray(row, np.float32).reshape(self.n_params)
+        segs = self.segments
+        if isinstance(row, (tuple, list)):
+            assert len(row) == len(segs), (
+                f"segmented row has {len(row)} entries, map has {len(segs)}"
+            )
+            return tuple(
+                np.asarray(r, np.float32).reshape(seg.size) if sf else ()
+                for r, seg, sf in zip(row, segs, self._seg_stateful)
+            )
+        flat = np.asarray(row, np.float32).reshape(self.n_params)
+        return tuple(
+            flat[seg.offset : seg.offset + seg.size].copy() if sf else ()
+            for seg, sf in zip(segs, self._seg_stateful)
+        )
+
     # ------------------------------------------------------- row-level API
-    def get_row(self, client_id: int) -> np.ndarray | None:
+    def get_row(self, client_id: int):
         row = self._rows.get(int(client_id))
         if row is not None:
             self._rows.move_to_end(int(client_id))
         return row
 
     def put_row(self, client_id: int, row) -> None:
-        arr = np.asarray(row, np.float32).reshape(self.n_params)
-        self._rows[int(client_id)] = arr
+        self._rows[int(client_id)] = self._pack_row(row)
         self._rows.move_to_end(int(client_id))
         while len(self._rows) > self.capacity:
             self._rows.popitem(last=False)  # eviction == residual reset to 0
@@ -210,29 +249,69 @@ class CohortState:
 
     # ------------------------------------------------- cohort (engine) API
     def gather(self, cohort_ids):
-        """Round-local dense cohort state, row i belongs to cohort_ids[i]."""
+        """Round-local dense cohort state, row i belongs to cohort_ids[i].
+
+        The returned pytree matches ``codec.init_client_state(C, n_params)``
+        structurally, so the jitted engine is oblivious to the store."""
         if self.stateless:
             return ()
         import jax.numpy as jnp
 
-        out = np.zeros((len(cohort_ids), self.n_params), np.float32)
+        if self.segments is None:
+            out = np.zeros((len(cohort_ids), self.n_params), np.float32)
+            for i, cid in enumerate(cohort_ids):
+                row = self.get_row(cid)
+                if row is not None:
+                    out[i] = row
+            return jnp.asarray(out)
+
+        cols = [
+            np.zeros((len(cohort_ids), seg.size), np.float32) if sf else None
+            for seg, sf in zip(self.segments, self._seg_stateful)
+        ]
         for i, cid in enumerate(cohort_ids):
             row = self.get_row(cid)
             if row is not None:
-                out[i] = row
-        return jnp.asarray(out)
+                for col, r in zip(cols, row):
+                    if col is not None:
+                        col[i] = r
+        return tuple(
+            jnp.asarray(col) if col is not None else () for col in cols
+        )
 
     def scatter(self, cohort_ids, state) -> None:
         """Return the engine's updated rows to the spill store (same order
         as the ``gather`` that produced them)."""
         if self.stateless:
             return
-        rows = np.asarray(state, np.float32)
-        assert rows.shape == (len(cohort_ids), self.n_params), (
-            f"scatter shape {rows.shape} != ({len(cohort_ids)}, {self.n_params})"
+        if self.segments is None:
+            rows = np.asarray(state, np.float32)
+            assert rows.shape == (len(cohort_ids), self.n_params), (
+                f"scatter shape {rows.shape} != ({len(cohort_ids)}, {self.n_params})"
+            )
+            for cid, row in zip(cohort_ids, rows):
+                self.put_row(cid, row)
+            return
+        state = tuple(state)
+        assert len(state) == len(self.segments), (
+            f"segmented scatter has {len(state)} entries, map has "
+            f"{len(self.segments)}"
         )
-        for cid, row in zip(cohort_ids, rows):
-            self.put_row(cid, row)
+        cols = []
+        for st, seg, sf in zip(state, self.segments, self._seg_stateful):
+            if not sf:
+                cols.append(None)
+                continue
+            arr = np.asarray(st, np.float32)
+            assert arr.shape == (len(cohort_ids), seg.size), (
+                f"segment {seg.name!r} scatter shape {arr.shape} != "
+                f"({len(cohort_ids)}, {seg.size})"
+            )
+            cols.append(arr)
+        for i, cid in enumerate(cohort_ids):
+            self.put_row(
+                cid, tuple(() if col is None else col[i] for col in cols)
+            )
 
     # ---------------------------------------------------------- accounting
     def __len__(self) -> int:
@@ -240,7 +319,11 @@ class CohortState:
 
     @property
     def nbytes(self) -> int:
-        return sum(r.nbytes for r in self._rows.values())
+        return sum(
+            sum(x.nbytes for x in r if not isinstance(x, tuple))
+            if isinstance(r, tuple) else r.nbytes
+            for r in self._rows.values()
+        )
 
     def reset(self) -> None:
         self._rows.clear()

@@ -110,10 +110,24 @@ class CompressedParameters:
 
 
 def compress_to_wire(codec, enc, n_params: int) -> CompressedParameters:
-    """Serialize a ``codec.encode`` payload into the uplink wire object."""
-    payload = codec.wire_payload(enc)
+    """Serialize a codec payload into the uplink wire object.
+
+    ``enc`` is either a flat ``codec.encode`` payload dict or a
+    ``StructuredUpdate`` (segmented codecs): per segment i, the fields of
+    ``codec.segment_wire_payload`` are namespaced ``s{i}.<key>`` — one flat
+    field list, so the tensors/aux/num_bytes machinery is shared."""
+    from .compression import StructuredUpdate
+
+    if isinstance(enc, StructuredUpdate):
+        items = [
+            (f"s{i}.{key}", value)
+            for i, (seg, p) in enumerate(zip(enc.segments, enc.payloads))
+            for key, value in codec.segment_wire_payload(p, seg).items()
+        ]
+    else:
+        items = list(codec.wire_payload(enc).items())
     tensors, manifest, fields, aux = [], [], [], {}
-    for key, value in payload.items():
+    for key, value in items:
         if isinstance(value, (int, float)):
             aux[key] = value
             continue
@@ -133,10 +147,23 @@ def wire_to_enc(cp: CompressedParameters) -> dict:
     place the CompressedParameters deserialization protocol lives — both
     the per-client dense decode (``wire_to_pytree``) and the Strategy's
     grouped kernel reduce consume it."""
+    from .compression import StructuredUpdate
+
     payload = dict(cp.aux)
     for key, buf, (dtype, shape) in zip(cp.fields, cp.tensors, cp.manifest):
         payload[key] = _decode_array(buf, dtype, shape)
-    return cp.codec.from_wire(payload)
+    codec = cp.codec
+    if getattr(codec, "segments", None) is not None:
+        segs = codec.segments
+        per: list[dict] = [{} for _ in segs]
+        for key, value in payload.items():
+            si, sub = key.split(".", 1)
+            per[int(si[1:])][sub] = value
+        return StructuredUpdate(segs, tuple(
+            codec.segment_from_wire(fields, seg)
+            for fields, seg in zip(per, segs)
+        ))
+    return codec.from_wire(payload)
 
 
 def wire_to_pytree(cp: CompressedParameters, global_params: PyTree) -> PyTree:

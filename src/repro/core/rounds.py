@@ -21,18 +21,23 @@ telescopes), and it is excluded from the loss/steps metrics.  ``mask=None``
 
 ``client_state`` is a codec-owned pytree
 (``spec.codec.init_client_state(n_clients, n_params)``): error-feedback
-codecs carry a (C, n_params) fp32 residual buffer so the compression error
-telescopes across rounds; ``NullCodec`` — the default — carries an empty
-pytree, so the uncompressed engine allocates no client state at all.  The
-same signature holds whether or not anything is compressed: there is no
-forked "compressed round step" anymore.
+codecs carry a fp32 residual buffer — one (C, n_params) block for a flat
+codec, or a per-segment tuple of (C, seg.size) blocks when the codec
+carries a ``SegmentMap`` (stateless segments hold ``()``) — so the
+compression error telescopes across rounds; ``NullCodec`` — the default —
+carries empty state, so the uncompressed engine allocates no client state
+at all.  The engine never inspects the structure: it threads whatever the
+codec initialized through ``aggregate_updates`` / ``transmit_tree``, so
+flat and segmented codecs share every code path below.  The same
+signature holds whether or not anything is compressed: there is no forked
+"compressed round step" anymore.
 
 Population mode (core/population.py) changes none of this: the engine
-still receives a dense, static-shaped ``(C, n_params)`` ``client_state`` —
-the population layer *gathers* the sampled cohort's resident rows into
-that array before the call (row i belongs to cohort id i, missing/evicted
-rows are zeros) and *scatters* ``new_client_state`` back by the same id
-order afterwards.  C is the fixed cohort size, never the population size,
+still receives dense, static-shaped ``client_state`` arrays (one
+``(C, n_params)`` block, or the per-segment tuple) — the population layer
+*gathers* the sampled cohort's resident rows into those arrays before the
+call (row i belongs to cohort id i, missing/evicted rows are zeros) and
+*scatters* ``new_client_state`` back by the same id order afterwards.  C is the fixed cohort size, never the population size,
 so the jitted program, the participation mask, and the codec contracts are
 unchanged shape-wise round to round.
 
@@ -58,10 +63,12 @@ Three mesh mappings (DESIGN.md §4), every one codec-aware:
   entering the accumulated weighted delta, and the per-client state rows
   are scanned alongside.  ``NullCodec``'s identity ``transmit_tree`` keeps
   the bf16 dense accumulator and never flattens a sharded model.  Caveat:
-  an error-feedback codec here allocates its unsharded (C, n_params) fp32
-  state and a replicated flat delta per scan step — fine for models whose
-  flat update fits on one host, NOT for the multi-B fsdp archs this mode
-  exists for (sharded codec state is a ROADMAP open item).
+  an error-feedback codec here still materializes a replicated flat delta
+  per scan step; a segmented codec at least splits its fp32 state into
+  per-segment (C, seg.size) blocks (so no single (C, n_params) monolith),
+  but the blocks remain unsharded — fine for models whose flat update fits
+  on one host, NOT for multi-B fsdp archs (sharding the per-segment blocks
+  along the mesh is the remaining gap).
 
 A heterogeneous fleet runs inside ONE jitted round via ``MixedCodec``: its
 static per-client assignment partitions the client axis into per-codec

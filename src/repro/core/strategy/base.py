@@ -281,7 +281,9 @@ class Strategy:
         pseudo-gradient stays EXACTLY zero at untransmitted coordinates, so
         FedOpt leaves them untouched (no fp-noise adam drift).
         """
-        from ..compression import Int8Codec, NullCodec, TopKCodec
+        from ..compression import (
+            Int8Codec, NullCodec, StructuredUpdate, TopKCodec,
+        )
         from ..protocol import wire_to_enc
 
         if not results or not self._grouped_fit_compatible():
@@ -291,7 +293,9 @@ class Strategy:
             cp = res.parameters
             # exact types, not isinstance: a codec subclass may redefine
             # the wire format (from_wire/decode), which only the per-client
-            # dense decode interprets correctly
+            # dense decode interprets correctly.  Segmented Null/Int8/TopK
+            # qualify (same types, same wire per segment); a structure-
+            # changing codec (LoRA) densifies per client instead.
             if not isinstance(cp, CompressedParameters) or type(cp.codec) not in (
                 NullCodec, Int8Codec, TopKCodec
             ):
@@ -302,7 +306,10 @@ class Strategy:
                 else {"q", "scale"} if type(cp.codec) is Int8Codec
                 else {"delta"}
             )
-            if not required <= set(enc):
+            payloads = (
+                enc.payloads if isinstance(enc, StructuredUpdate) else (enc,)
+            )
+            if not all(required <= set(p) for p in payloads):
                 return None
             cps.append(cp)
             encs.append(enc)
@@ -328,10 +335,31 @@ class Strategy:
         return self.server_update(avg_params, global_params, server_state, rnd)
 
     @staticmethod
-    def _group_wire_sum(codec, encs: list[dict], w_g, n_params: int):
+    def _group_wire_sum(codec, encs: list, w_g, n_params: int):
         """One codec group's partial weighted delta sum (N,), on the group's
         own kernel path (``normalize=False``: the caller owns the ONE
-        fleet-wide denominator)."""
+        fleet-wide denominator).
+
+        A segmented group reduces segment by segment through the SAME
+        kernels, concatenating the per-segment partial sums — so the
+        kernel dispatch's VMEM budget (``scatter_reduce.MAX_N_PARAMS``)
+        gates on ``seg.size`` per call, not the whole model: a fleet whose
+        total ``n_params`` is over budget still scatter-reduces every
+        in-budget segment on the Pallas path."""
+        if getattr(codec, "segments", None) is not None:
+            parts = [
+                Strategy._flat_wire_sum(
+                    codec, [su.payloads[i] for su in encs], w_g, seg.size
+                )
+                for i, seg in enumerate(codec.segments)
+            ]
+            return jnp.concatenate(parts)
+        return Strategy._flat_wire_sum(codec, encs, w_g, n_params)
+
+    @staticmethod
+    def _flat_wire_sum(codec, encs: list[dict], w_g, n_params: int):
+        """The flat-format partial sum for ONE segment (or the whole update
+        for an unsegmented codec)."""
         from repro.kernels import ops
 
         from ..compression import Int8Codec, TopKCodec

@@ -131,10 +131,21 @@ def dequant_reduce(q, scales, weights, block: int = 256, *, interpret=False,
 # --smoke asserts this moves when TopK aggregates, so the scatter path cannot
 # silently regress to densify-then-reduce
 _TOPK_SPARSE_CALLS = 0
+# count of dispatches that took the VMEM-resident Pallas branch (vs the XLA
+# scatter-add oracle).  Segmented codecs call this reduce once per segment,
+# so the `n_params <= MAX_N_PARAMS` gate below sees seg.size — a model whose
+# TOTAL size is over budget still takes the Pallas path for every in-budget
+# segment; tests pin that per-segment dispatch moves this counter where the
+# monolithic flat vector would not.
+_TOPK_PALLAS_CALLS = 0
 
 
 def topk_sparse_calls() -> int:
     return _TOPK_SPARSE_CALLS
+
+
+def topk_pallas_calls() -> int:
+    return _TOPK_PALLAS_CALLS
 
 
 def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret=False,
@@ -144,8 +155,11 @@ def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret=False,
     O(C·k) on every branch — the Pallas kernel keeps the (N,) accumulator
     VMEM-resident (so it only runs when N fits); above that, the XLA
     scatter-add oracle.  Neither materializes a dense (C, N) matrix.
+    ``n_params`` is whatever span the caller reduces — the whole flat
+    update, or one segment of a ``SegmentMap``-structured one — so the
+    VMEM gate is per-call, i.e. per segment for segmented codecs.
     """
-    global _TOPK_SPARSE_CALLS
+    global _TOPK_SPARSE_CALLS, _TOPK_PALLAS_CALLS
     _TOPK_SPARSE_CALLS += 1
     if _use_pallas() or interpret:
         # the kernel file owns its VMEM budget; the dispatch gate is derived
@@ -153,6 +167,7 @@ def topk_scatter_reduce(idx, val, weights, n_params: int, *, interpret=False,
         from .scatter_reduce import MAX_N_PARAMS, topk_scatter_reduce as sr
 
         if n_params <= MAX_N_PARAMS:
+            _TOPK_PALLAS_CALLS += 1
             out = sr(
                 idx, val, weights, n_params,
                 interpret=interpret or jax.default_backend() != "tpu",

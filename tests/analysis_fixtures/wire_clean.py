@@ -31,3 +31,11 @@ class ScalarCodec(UpdateCodec):
 
 class NamedCodec(UpdateCodec):
     name = "identity"                  # no codec-path override: exempt
+
+
+class FactorSegmentCodec(UpdateCodec):
+    def encode_segment(self, vec, seg):
+        return vec[: seg.size // 2]
+
+    def segment_wire_bytes(self, seg):     # per-segment cost restated
+        return 4 * (seg.size // 2)

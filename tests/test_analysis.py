@@ -69,6 +69,7 @@ FIRE = {
     }),
     "wire-accounting": (("wire_bad.py",), {
         ("EveryOtherCodec", "wire-bytes-not-overridden"),
+        ("SparseSegmentCodec", "segment-wire-bytes-not-overridden"),
     }),
 }
 

@@ -44,8 +44,26 @@ def test_run_smoke_microbenches(capsys):
     assert any(n.startswith("fl_round_step") for n in names)
     assert any(n.startswith("fedavg_reduce") for n in names)
     assert any(n.startswith("quantize_int8") for n in names)
+    assert any(n.startswith("structured_lora_roundtrip") for n in names)
     # --smoke skips the paper tables (minutes of training)
     assert not any(n.startswith("table") for n in names)
+
+
+def test_lora_frontier_writes_json_and_guards(tmp_path, capsys):
+    """The lora[] section: frontier rows at full LLM scale, the acceptance
+    run on the reduced LM, and BENCH_lora.json with both."""
+    from benchmarks.compression_bench import bench_lora_frontier
+
+    out = tmp_path / "BENCH_lora.json"
+    rows = bench_lora_frontier(rounds=1, smoke=True, out=str(out))
+    names = [r.split(",")[0] for r in rows]
+    assert any(n.startswith("lora[qwen3-0.6b/r4]") for n in names)
+    assert any(n.startswith("lora[mixtral-8x7b/r4]") for n in names)
+    assert any(n.startswith("lora[qwen3_reduced/lora_r4]") for n in names)
+    data = json.loads(out.read_text())
+    assert data["bench"] == "lora" and data["frontier"]
+    runs = data["runs"]
+    assert runs["int8"]["wire_bytes"] >= 10 * runs["lora_r4"]["wire_bytes"]
 
 
 def test_paper_tables_one_cell():

@@ -1,0 +1,84 @@
+"""Drift coverage for the examples/ drivers.
+
+The examples are the repo's public face; nothing else imports them, so an
+API rename silently breaks them until a reader hits the traceback.  These
+tests execute both drivers on tiny configs every CI run.
+
+``federated_llm_finetune`` exposes ``main(argv)`` and is driven directly —
+including the structured-update path (``--codec lora``) that the ISSUE's
+acceptance pins: the LoRA wire must undercut the dense Int8 wire by >= 10x
+on the LLM configs.  ``quickstart`` is a straight-line script, so it runs
+under ``runpy`` (same module-level execution a reader gets).
+"""
+import runpy
+import sys
+from pathlib import Path
+
+import pytest
+
+EXAMPLES = Path(__file__).resolve().parent.parent / "examples"
+sys.path.insert(0, str(EXAMPLES))
+
+TINY = ["--rounds", "2", "--layers", "1", "--d-model", "64",
+        "--seq", "16", "--batch", "1", "--clients", "2", "--local-steps", "2"]
+
+
+def _run_finetune(extra):
+    import federated_llm_finetune as ex
+
+    params, loss = ex.main(TINY + extra)
+    assert loss == loss, "final loss is NaN"  # noqa: PLR0124 (NaN check)
+    return params, loss
+
+
+def test_llm_finetune_fp32_smoke():
+    params, _ = _run_finetune(["--codec", "fp32"])
+    assert params  # a real pytree came back
+
+
+def test_llm_finetune_lora_smoke():
+    _run_finetune(["--codec", "lora", "--rank", "2"])
+
+
+def test_llm_finetune_lora_moe_arch():
+    """The dormant MoE config: stacked-expert 3-D leaves fold into matrix
+    segments and ship low-rank factors inside the jitted round."""
+    _run_finetune(["--arch", "mixtral-8x7b", "--codec", "lora", "--rank", "2"])
+
+
+def test_llm_finetune_lora_wire_beats_int8_10x():
+    """ISSUE acceptance: LoRA wire >= 10x under dense Int8 on the LLM arch."""
+    import jax
+
+    import federated_llm_finetune as ex
+    from repro.configs.base import get_config
+    from repro.models import build_model
+    from repro.utils.pytree import tree_size
+
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=1, d_model=64)
+    params = build_model(cfg).init(jax.random.key(0))
+    n = tree_size(params)
+    lora, int8 = ex.build_codec("lora", params, rank=4)
+    assert int8.wire_bytes(n) >= 10 * lora.wire_bytes(n), (
+        f"lora wire {lora.wire_bytes(n)} vs int8 {int8.wire_bytes(n)}"
+    )
+
+
+def test_llm_finetune_rejects_unknown_codec():
+    import jax
+
+    import federated_llm_finetune as ex
+    from repro.configs.base import get_config
+    from repro.models import build_model
+
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=1, d_model=64)
+    params = build_model(cfg).init(jax.random.key(0))
+    with pytest.raises(ValueError, match="unknown codec"):
+        ex.build_codec("zstd", params, rank=4)
+
+
+def test_quickstart_runs(capsys):
+    runpy.run_path(str(EXAMPLES / "quickstart.py"), run_name="quickstart")
+    out = capsys.readouterr().out
+    assert "final accuracy:" in out
+    assert "population mode" in out
