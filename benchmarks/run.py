@@ -90,13 +90,29 @@ def bench_round_step() -> list[str]:
 
 
 def bench_compression() -> list[str]:
+    from repro.core.compression import CompressedPsum, fp32_collective_bytes
     from repro.kernels import ref
 
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(1 << 20,)), jnp.float32)
     q8 = jax.jit(lambda x: ref.quantize_int8(x))
     us = _timeit(q8, x)
-    return [f"quantize_int8_1M,{us:.0f},GBps={(x.size*4)/(us/1e6)/1e9:.1f}"]
+    rows = [f"quantize_int8_1M,{us:.0f},GBps={(x.size*4)/(us/1e6)/1e9:.1f}"]
+    # collective wire drift gate: shared-scale pack/unpack roundtrip + the
+    # per-hop byte reduction the cost model bills (mesh_bench measures the
+    # full round; this row just pins the entry points)
+    scales = jnp.maximum(
+        jnp.max(jnp.abs(x.reshape(-1, 256)), axis=1), 1e-8
+    ) / 127.0
+    cpk = jax.jit(
+        lambda x, s: ref.collective_unpack(ref.collective_pack(x, s), s)
+    )
+    us_c = _timeit(cpk, x, scales)
+    ratio = fp32_collective_bytes(x.size) / CompressedPsum().collective_bytes(
+        x.size
+    )
+    rows.append(f"collective_pack_1M,{us_c:.0f},wire_vs_fp32={ratio:.1f}x")
+    return rows
 
 
 def bench_structured_wire() -> list[str]:

@@ -16,16 +16,29 @@ wire carries, and the base ``segment_wire_bytes`` (which bills the *flat*
 format at ``seg.size``) silently mis-costs it — so such an override must
 restate ``segment_wire_bytes`` (flat ``wire_bytes`` does not discharge
 this: the segmented billing path never calls it).
+
+The *collective* surface carries it too: a class whose methods psum an
+ENCODED payload (any ``...psum(...)`` call next to a pack/encode-family
+call in the same class) changes what crosses the mesh links per hop, and
+the fp32 default accounting silently mis-bills it — such a class must
+define ``collective_bytes`` stating its per-device per-hop wire size
+(``compression.CompressedPsum`` is the canonical example).  Plain fp32
+psums (no encode in the class) are the billed default and are not flagged.
 """
 from __future__ import annotations
 
-from ..core import Finding, Project
+from ..core import Finding, Project, attr_chain, iter_calls
 
 NAME = "wire-accounting"
 WIRE_METHODS = ("wire_bytes", "_wire_bytes_scalar")
 CODEC_METHODS = ("encode", "decode", "encode_batch", "decode_batch")
 SEGMENT_WIRE_METHODS = ("segment_wire_bytes",)
 SEGMENT_CODEC_METHODS = ("encode_segment", "decode_segment")
+COLLECTIVE_WIRE_METHODS = ("collective_bytes",)
+# pack/encode-family callees that put an encoded payload on the wire
+COLLECTIVE_PACK_CALLS = (
+    "collective_pack", "encode", "encode_segment", "encode_batch",
+)
 
 
 def _class_index(project: Project):
@@ -56,11 +69,45 @@ def _ancestry_defines_wire(cls, idx, seen=None) -> bool:
     return False
 
 
+def _class_call_names(cls) -> set[str]:
+    """Last attr-chain component of every call made by the class's own
+    methods (``jax.lax.psum`` -> "psum", ``ops.collective_pack`` ->
+    "collective_pack", bare ``encode(...)`` -> "encode")."""
+    names = set()
+    for fn in cls.methods.values():
+        for call in iter_calls(fn.node):
+            chain = attr_chain(call.func)
+            if chain:
+                names.add(chain[-1])
+    return names
+
+
+def _check_collective(mod, cls) -> Finding | None:
+    """A class that psums an encoded payload must restate collective_bytes."""
+    calls = _class_call_names(cls)
+    if "psum" not in calls:
+        return None
+    packs = sorted(calls & set(COLLECTIVE_PACK_CALLS))
+    if not packs or any(m in cls.methods for m in COLLECTIVE_WIRE_METHODS):
+        return None
+    return Finding(
+        NAME, mod.path, cls.node.lineno, cls.name,
+        "collective-bytes-not-stated",
+        f"{cls.name} psums an encoded payload ({'/'.join(packs)}) but "
+        "does not define collective_bytes — the cost model will bill the "
+        "fp32 collective for wire the class compressed; state the "
+        "per-device per-hop byte size",
+    )
+
+
 def check(project: Project) -> list[Finding]:
     findings = []
     idx = _class_index(project)
     for mod in project.modules.values():
         for cls in mod.classes.values():
+            coll = _check_collective(mod, cls)
+            if coll is not None:
+                findings.append(coll)
             if not _ancestry_defines_wire(cls, idx):
                 continue
             overridden = [m for m in CODEC_METHODS if m in cls.methods]

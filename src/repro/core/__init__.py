@@ -15,12 +15,12 @@ from .scheduler import (
     BufferedAsync,
 )
 from .rounds import (
-    RoundSpec, cohort_dispatch_mask, make_client_update, make_multi_round_step,
-    make_round_step,
+    RoundSpec, cohort_dispatch_mask, init_collective_residual,
+    make_client_update, make_multi_round_step, make_round_step,
 )
 from .compression import (
     UpdateCodec, Int8Codec, TopKCodec, NullCodec, MixedCodec, LoRACodec,
-    Segment, SegmentMap, StructuredUpdate,
+    Segment, SegmentMap, StructuredUpdate, CompressedPsum,
     BandwidthCodecPolicy, compress_update, decompress_update,
 )
 from .population import CohortState, LazyClientPool, Population

@@ -369,6 +369,14 @@ class CostModel:
     # packed Population: client_id -> device class via profile codes instead
     # of the legacy round-robin over `profiles` (which may then be empty)
     population: Any = None
+    # mesh-collective accounting (the shard_map execution substrate): tiers
+    # ordered outer->inner like `client_axes`, e.g. (("pod", 2), ("data", 4)).
+    # None = no mesh (vmap/sequential): rounds ship client uplinks only and
+    # `round_comm_bytes` is unchanged.  `collective` mirrors
+    # RoundSpec.collective ("fp32" | "int8").
+    mesh_tiers: tuple = None
+    collective: str = "fp32"
+    collective_block: int = 256
 
     def profile_for(self, client_id: int) -> DeviceProfile:
         """The device class behind a client id — the ONE id->profile map
@@ -440,23 +448,78 @@ class CostModel:
         )
         return [int(u) for u in uplink_bytes]
 
+    # ---------------- mesh-collective accounting ----------------
+    def _per_device_hop_bytes(self, n_elems: int) -> int:
+        """Bytes ONE device ships for ONE psum transfer of an ``n_elems``
+        partial sum — owned by the collective codecs themselves so this
+        model can never drift from what the round step actually ships."""
+        from .compression import CompressedPsum, fp32_collective_bytes
+
+        if self.collective == "int8":
+            return CompressedPsum(block=self.collective_block).collective_bytes(
+                n_elems
+            )
+        if self.collective == "fp32":
+            return fp32_collective_bytes(n_elems)
+        raise ValueError(
+            f"CostModel.collective={self.collective!r}: expected fp32 | int8"
+        )
+
+    def collective_bytes_by_tier(self, n_elems: int | None = None) -> dict:
+        """Per-tier cross-link traffic of ONE hierarchical psum (reduce +
+        broadcast), ``{axis_name: bytes}``.
+
+        Tiers are ordered outer->inner like ``client_axes`` and the round
+        step reduces inner-first, so by the time tier i (counting from the
+        outside) transfers, the axes inside it are already reduced: tier i
+        runs ``prod(sizes[:i])`` independent groups of ``s_i`` devices, and
+        a ring reduce+broadcast over ``s_i`` devices moves ``2 * (s_i - 1)``
+        transfers per group.  Each transfer ships the full partial sum —
+        payload (1 B/elem int8 or 4 B/elem fp32) + the scale sidecar + the
+        fp32 weight denominator (``CompressedPsum.collective_bytes`` /
+        ``fp32_collective_bytes``).
+        """
+        if not self.mesh_tiers:
+            return {}
+        n = (self.update_bytes // 4) if n_elems is None else int(n_elems)
+        per_hop = self._per_device_hop_bytes(n)
+        out = {}
+        groups = 1
+        for name, size in self.mesh_tiers:
+            out[name] = groups * 2 * (int(size) - 1) * per_hop
+            groups *= int(size)
+        return out
+
+    def collective_bytes(self, n_elems: int | None = None) -> int:
+        """Total cross-link bytes of one hierarchical psum, all tiers."""
+        return sum(self.collective_bytes_by_tier(n_elems).values())
+
     def round_comm_bytes(
         self,
         n_clients: int,
         *,
         payload_bytes: int | None = None,
         uplink_bytes: int | list[int] | None = None,
+        n_elems: int | None = None,
     ) -> int:
-        """Total bytes crossing the network this round (up + down, all clients).
+        """Total bytes crossing the network this round (up + down, all clients,
+        plus — on the mesh path — the aggregation collective itself).
 
         Honors the same ``payload_bytes`` override as ``round_costs`` /
         ``client_round_cost`` (both directions), so the reported byte count
         can never disagree with the time/energy charge for the same round;
         ``uplink_bytes`` still overrides only the client->server leg.
+
+        With ``mesh_tiers`` set, the cross-device psum traffic of the
+        shard_map round is billed on top of the client uplinks (it used to
+        be silently omitted, under-reporting mesh rounds by a full model
+        per link hop); ``n_elems`` sizes the psum operand (default: the
+        fp32 element count of ``update_bytes``).
         """
         down = self.update_bytes if payload_bytes is None else payload_bytes
         ups = self._per_client(uplink_bytes, n_clients)
-        return sum((down if up is None else up) + down for up in ups)
+        wire = sum((down if up is None else up) + down for up in ups)
+        return wire + self.collective_bytes(n_elems)
 
     def round_wall_time(self, costs: list[ClientCost]) -> float:
         """Synchronous FedAvg: the round ends when the slowest client reports.

@@ -185,7 +185,8 @@ class CohortState:
     segments), never one monolithic (n_params,) buffer.
     """
 
-    def __init__(self, codec, n_params: int, *, capacity: int = 4096):
+    def __init__(self, codec, n_params: int, *, capacity: int = 4096,
+                 shardings=None):
         if isinstance(codec, MixedCodec):
             raise TypeError(
                 "MixedCodec assigns codecs to static client-axis slots; a "
@@ -196,6 +197,14 @@ class CohortState:
         self.codec = codec
         self.n_params = int(n_params)
         self.capacity = int(capacity)
+        # mesh layout for the gathered cohort blocks (fsdp archs): one
+        # NamedSharding for the flat (C, n_params) block, or a tuple with
+        # one per segment (models.sharding.client_state_shardings) — gather
+        # device_puts each stateful block to it, so the dense cohort state
+        # lands sharded (param dim split, per-device bytes ~1/n_dev) and is
+        # never materialized replicated.  Placement only: values bitwise
+        # what the unsharded gather returns.
+        self.shardings = shardings
         self.stateless = (
             codec is None or not codec.carries_client_state(self.n_params)
         )
@@ -263,6 +272,15 @@ class CohortState:
                 row = self.get_row(cid)
                 if row is not None:
                     out[i] = row
+            if self.shardings is not None:
+                import jax
+
+                sh = (
+                    self.shardings[0]
+                    if isinstance(self.shardings, (tuple, list))
+                    else self.shardings
+                )
+                return jax.device_put(out, sh)
             return jnp.asarray(out)
 
         cols = [
@@ -275,6 +293,16 @@ class CohortState:
                 for col, r in zip(cols, row):
                     if col is not None:
                         col[i] = r
+        if self.shardings is not None:
+            import jax
+
+            assert len(self.shardings) == len(cols), (
+                f"{len(self.shardings)} shardings for {len(cols)} segments"
+            )
+            return tuple(
+                jax.device_put(col, sh) if col is not None else ()
+                for col, sh in zip(cols, self.shardings)
+            )
         return tuple(
             jnp.asarray(col) if col is not None else () for col in cols
         )

@@ -58,6 +58,32 @@ Three mesh mappings (DESIGN.md §4), every one codec-aware:
   (``codec.transmit_tree``: encode -> decode inside the manual region; the
   psum operand is the decoded payload, numerically identical to the server
   decoding every client's uplink).
+
+  **Collective wire contract** (``RoundSpec.collective``): the psum operand
+  is always a *partial weighted sum* — ``decoded_delta * w_c`` — which is
+  the one form that commutes with the reduction (sum of weighted terms,
+  divided once by the psum'd ``safe_weight_sum`` denominator; the same
+  contract the strategy-side wire reduce uses group-wise).  ``"fp32"``
+  (default) psums that operand as-is, bitwise the pre-compression path.
+  ``"int8"`` (``CompressedPsum``) quantizes it per 256-elem block against
+  a scale *shared by every reducing device* — each device computes its
+  local block-absmax, a cheap ``lax.pmax`` sidecar (4 B/block + the fp32
+  weight denominator) agrees on the max BEFORE anything quantizes, and
+  then every device's payload lives on one scale grid, so the int32 psum
+  accumulates exactly (``unpack(sum_d pack(x_d))`` matches
+  ``sum_d unpack(pack(x_d))`` to one final fp32 rounding — no per-hop
+  requantization error).  Payload values are clipped to [-127, 127]
+  (one byte on the wire; the int32 container is the *accumulator* dtype,
+  not the wire format) so the summed accumulator provably cannot overflow
+  below a fan-in of 2^31/127 ≈ 16.9M devices — no per-hop requantization,
+  ONE fused dequant after the last hop.  The per-device quantization error
+  lands in a collective error-feedback residual (``client_state =
+  (codec_state, resid)``, rows sharded P(client_axes)) that telescopes
+  across rounds exactly like the uplink codecs'.  A masked device
+  transmits nothing — not even its carried residual — and keeps its
+  residual row unchanged.  This shared-scale/partial-sum layout is also
+  the substrate a secure-aggregation codec needs: masked integer payloads
+  on a common grid sum server-side without per-client decode.
 - **sequential**: one client at a time occupies the whole mesh (scan over
   clients); each client's delta goes through the codec round-trip before
   entering the accumulated weighted delta, and the per-client state rows
@@ -66,9 +92,12 @@ Three mesh mappings (DESIGN.md §4), every one codec-aware:
   an error-feedback codec here still materializes a replicated flat delta
   per scan step; a segmented codec at least splits its fp32 state into
   per-segment (C, seg.size) blocks (so no single (C, n_params) monolith),
-  but the blocks remain unsharded — fine for models whose flat update fits
-  on one host, NOT for multi-B fsdp archs (sharding the per-segment blocks
-  along the mesh is the remaining gap).
+  but the blocks remain unsharded by default — fine for models whose flat
+  update fits on one host; for multi-B fsdp archs lay the per-segment
+  (C, seg.size) blocks out along the mesh with
+  ``models.sharding.shard_client_state`` (parameter dim over the fsdp
+  axes, client dim whole — placement only, values bitwise unchanged), so
+  per-device state memory drops by the full fsdp factor.
 
 A heterogeneous fleet runs inside ONE jitted round via ``MixedCodec``: its
 static per-client assignment partitions the client axis into per-codec
@@ -128,10 +157,11 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.models.sharding import shard_map_compat as _shard_map
 from repro.optim import Optimizer
 from repro.utils.pytree import safe_weight_sum, tree_where
 
-from .compression import MixedCodec, NullCodec
+from .compression import CompressedPsum, MixedCodec, NullCodec
 from .strategy.base import Strategy
 
 PyTree = Any
@@ -146,6 +176,10 @@ class RoundSpec:
     prox_mu: float = 0.0         # FedProx proximal coefficient (0 = off)
     microbatches: int = 1        # gradient accumulation within one local step
     codec: Any = field(default_factory=NullCodec)  # UpdateCodec (wire format)
+    # mesh-path collective wire: "fp32" (default — bitwise the pre-existing
+    # psum) or "int8" (CompressedPsum; opt-in, tolerance-bounded parity)
+    collective: str = "fp32"
+    collective_block: int = 256  # scale-block size of the int8 collective
 
 
 def make_client_update(
@@ -231,21 +265,17 @@ def make_client_update(
     return client_update
 
 
-def _shard_map(f, mesh, in_specs, out_specs, axis_names):
-    """shard_map across jax versions: manual over ``axis_names`` (the client
-    axes), automatic over every other mesh axis (the model axes) — the
-    top-level API when present, else the jax.experimental fallback, whose
-    ``auto=`` set expresses the same manual/auto split."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=axis_names, check_vma=False,
-        )
-    from jax.experimental.shard_map import shard_map as sm
-
-    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
-    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              check_rep=False, auto=auto)
+def init_collective_residual(global_params: PyTree, n_clients: int) -> PyTree:
+    """Zero per-device error-feedback state for the int8 collective
+    (``RoundSpec(collective="int8")``): one fp32 buffer per model leaf with
+    a leading client axis — on the mesh path clients map 1:1 onto devices,
+    so row i is device i's residual and shards P(client_axes) like every
+    other client-state block.  The mesh ``round_step`` then expects
+    ``client_state = (codec_state, this)``."""
+    return jax.tree.map(
+        lambda g: jnp.zeros((n_clients,) + g.shape, jnp.float32),
+        global_params,
+    )
 
 
 def _state_metrics(new_client_state) -> dict:
@@ -358,6 +388,20 @@ def make_round_step(
     client_update = make_client_update(loss_fn, opt, spec, trainable_mask)
     codec = spec.codec if spec.codec is not None else NullCodec()
 
+    if spec.collective not in ("fp32", "int8"):
+        raise ValueError(
+            f"RoundSpec.collective={spec.collective!r}: expected fp32 | int8"
+        )
+    compressed_collective = spec.collective == "int8"
+    if compressed_collective and (
+        mesh is None or spec.execution_mode != "parallel"
+    ):
+        raise NotImplementedError(
+            "collective='int8' compresses the mesh shard_map psum — it "
+            "requires execution_mode='parallel' with a mesh; the vmap and "
+            "sequential modes have no cross-device collective to compress"
+        )
+
     if spec.execution_mode == "parallel" and mesh is not None:
         if isinstance(codec, MixedCodec):
             raise NotImplementedError(
@@ -368,8 +412,16 @@ def make_round_step(
         from jax.sharding import PartitionSpec as P
 
         axes = client_axes
+        cpsum = (
+            CompressedPsum(block=spec.collective_block)
+            if compressed_collective else None
+        )
 
         def per_client(global_params, batches, weight, budget, mask_c, state):
+            if compressed_collective:
+                codec_state, coll_resid = state
+            else:
+                codec_state, coll_resid = state, None
             b0 = jax.tree.map(lambda x: x[0], batches)
             new_p, loss, steps = client_update(global_params, b0, budget[0])
 
@@ -379,7 +431,7 @@ def make_round_step(
                 lambda n, g: n.astype(jnp.float32) - g.astype(jnp.float32),
                 new_p, global_params,
             )
-            state_row = jax.tree.map(lambda x: x[0], state)
+            state_row = jax.tree.map(lambda x: x[0], codec_state)
             dec_delta, new_row = codec.transmit_tree(delta, state_row)
             if mask_c is not None:
                 # participation mask: a dropped client never transmitted —
@@ -403,20 +455,60 @@ def make_round_step(
                 wsum = jax.lax.psum(wsum, ax)
             wsum = jnp.where(wsum == 0.0, 1.0, wsum)  # safe_weight_sum, post-psum
 
-            def wmean(d):
-                wx = d.astype(jnp.float32) * wf
-                # hierarchical aggregation: reduce inside the pod first, then
-                # across pods (one pre-reduced tensor crosses the slow links)
-                for ax in reversed(axes):
-                    wx = jax.lax.psum(wx, ax)
-                return wx / wsum
+            if not compressed_collective:
+                def wmean(d):
+                    wx = d.astype(jnp.float32) * wf
+                    # hierarchical aggregation: reduce inside the pod first,
+                    # then across pods (one pre-reduced tensor crosses the
+                    # slow links)
+                    for ax in reversed(axes):
+                        wx = jax.lax.psum(wx, ax)
+                    return wx / wsum
 
-            avg = jax.tree.map(
-                lambda g, d: (g.astype(jnp.float32) + wmean(d)).astype(g.dtype),
-                global_params, dec_delta,
+                avg = jax.tree.map(
+                    lambda g, d: (g.astype(jnp.float32) + wmean(d)).astype(g.dtype),
+                    global_params, dec_delta,
+                )
+                return avg, loss[None], steps[None], jax.tree.map(
+                    lambda x: x[None], new_row
+                )
+
+            # int8 collective (module docstring: the collective wire
+            # contract): quantize this device's partial weighted sum per
+            # leaf against a pmax-shared block scale, psum the int payload
+            # hierarchically, dequant ONCE after the last hop.  The
+            # per-device quantization residual stays local and telescopes.
+            resid_row = jax.tree.map(lambda x: x[0], coll_resid)
+            live = None if mask_c is None else mask_c[0] > 0
+
+            def leaf_psum(d, r):
+                wx = d.astype(jnp.float32).reshape(-1) * wf
+                r = r.reshape(-1)
+                if live is not None:
+                    # a dropped device transmits NOTHING — not even its
+                    # carried residual — and keeps the residual unchanged
+                    r_in = jnp.where(live, r, 0.0)
+                else:
+                    r_in = r
+                total, new_r = cpsum.psum(wx, r_in, axes)
+                if live is not None:
+                    new_r = jnp.where(live, new_r, r)
+                return total.reshape(d.shape), new_r.reshape(d.shape)
+
+            leaves_d, treedef = jax.tree_util.tree_flatten(dec_delta)
+            leaves_r = treedef.flatten_up_to(resid_row)
+            pairs = [leaf_psum(d, r) for d, r in zip(leaves_d, leaves_r)]
+            sums = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+            new_resid_row = jax.tree_util.tree_unflatten(
+                treedef, [p[1] for p in pairs]
             )
-            return avg, loss[None], steps[None], jax.tree.map(
-                lambda x: x[None], new_row
+            avg = jax.tree.map(
+                lambda g, s: (g.astype(jnp.float32) + s / wsum).astype(g.dtype),
+                global_params, sums,
+            )
+            return avg, loss[None], steps[None], (
+                jax.tree.map(lambda x: x[None], new_row),
+                jax.tree.map(lambda x: x[None], new_resid_row),
             )
 
         def round_step(
@@ -458,8 +550,23 @@ def make_round_step(
                 # examples-weighted, like every other execution mode: the
                 # same round must report the same metric everywhere
                 **_masked_metrics(losses, steps, weights, mask),
-                **_state_metrics(new_client_state),
             }
+            if compressed_collective:
+                # keep the uplink codec's residual telemetry separate from
+                # the collective's own error-feedback buffer
+                metrics.update(_state_metrics(new_client_state[0]))
+                coll = _state_metrics(
+                    tuple(
+                        leaf.reshape(leaf.shape[0], -1)
+                        for leaf in jax.tree.leaves(new_client_state[1])
+                    )
+                )
+                if coll:
+                    metrics["collective_residual_norm_mean"] = coll[
+                        "residual_norm_mean"
+                    ]
+            else:
+                metrics.update(_state_metrics(new_client_state))
             return new_global, new_state, new_client_state, metrics
 
         return round_step

@@ -280,6 +280,14 @@ class Strategy:
         strategy ``_grouped_fit_compatible`` admits.  A homogeneous-TopK
         pseudo-gradient stays EXACTLY zero at untransmitted coordinates, so
         FedOpt leaves them untouched (no fp-noise adam drift).
+
+        This partial-weighted-sum-under-ONE-denominator contract is the
+        same one the mesh round step's collective reduces device-side —
+        and what ``compression.CompressedPsum`` quantizes when
+        ``RoundSpec.collective="int8"``: partial sums commute with the
+        reduction, so they may be combined group-wise here or psum'd
+        (quantized on a shared scale grid) across the mesh there, with the
+        single division happening once at the end either way.
         """
         from ..compression import (
             Int8Codec, NullCodec, StructuredUpdate, TopKCodec,

@@ -1,0 +1,95 @@
+"""int8 collective pack/unpack (Pallas TPU) for the compressed mesh psum.
+
+The mesh round's hierarchical psum moves each device's *partial weighted
+sum* across the interconnect.  ``CompressedPsum`` (core/compression.py)
+shrinks that wire: every device quantizes its partial sum against a
+block-max scale that is **shared across the reducing devices** (a cheap
+``lax.pmax`` of per-256-block absmax runs before the psum), so the int8
+payloads are exactly summable in the integer domain — the int32 psum
+loses nothing, ``unpack(sum_d pack(x_d))`` equals
+``sum_d unpack(pack(x_d))`` up to ONE final fp32 rounding per element
+(instead of a requantization per hop) — and one fused dequant after the
+last hop recovers the fp32 sum.
+
+Unlike ``quantize.py`` (the uplink codec, which derives its scale from its
+own input), both kernels here take the scale as an INPUT: scale choice is
+a collective decision, not a local one.  ``pack`` writes the quantized
+values into an int32 container — the psum accumulator dtype; the values
+themselves fit int8 (|q| <= 127, the wire carries one byte per element),
+and the int32 sum cannot overflow below a 2**31/127 ~= 16.9M-device fan-in.
+
+Grid = (N/bn,); each step packs/unpacks a bn tile (bn % 256 == 0) in one
+HBM pass, same streaming shape as the uplink quantizer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+# Static VMEM ceiling audited by fedlint (pallas-vmem-budget), in
+# fp32-equivalent elements (int32 tiles cost the same): 128K elems = 512 KB
+# — thin streaming kernels, far below the ~16 MB/core.
+VMEM_BUDGET_ELEMS = 1 << 17
+VMEM_ASSUMES = {"n": 1 << 22}
+
+
+def _pack_kernel(x_ref, s_ref, q_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32).reshape(-1, block)
+    s = s_ref[...].astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / s[:, None]), -127, 127)
+    q_ref[...] = q.reshape(-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bn", "interpret"))
+def collective_pack(x, scales, *, block: int = BLOCK, bn: int = 8192,
+                    interpret: bool = False):
+    """x: (N,) fp32, scales: (N/block,) fp32 (shared, pre-pmax'd) ->
+    q int32 (N,) with every value in [-127, 127].  N % block == 0."""
+    n = x.shape[0]
+    bn = min(bn, n)
+    assert n % block == 0 and bn % block == 0
+    kernel = functools.partial(_pack_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn // block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x, scales)
+
+
+def _unpack_kernel(q_ref, s_ref, x_ref, *, block: int):
+    q = q_ref[...].astype(jnp.float32).reshape(-1, block)
+    s = s_ref[...].astype(jnp.float32)
+    x_ref[...] = (q * s[:, None]).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bn", "interpret"))
+def collective_unpack(q, scales, *, block: int = BLOCK, bn: int = 8192,
+                      interpret: bool = False):
+    """q: (N,) int32 (one device's pack, or the psum of many), scales as in
+    ``collective_pack`` -> fp32 (N,): the fused post-psum dequant."""
+    n = q.shape[0]
+    bn = min(bn, n)
+    assert n % block == 0 and bn % block == 0
+    kernel = functools.partial(_unpack_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn // block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(q, scales)

@@ -194,3 +194,28 @@ def dequantize_int8(q, scale, block: int = 256, *, interpret=False):
         if q.shape[-1] % max(block, 1024) == 0:
             return dq(q, scale, block=block, interpret=interpret or jax.default_backend() != "tpu")
     return ref.dequantize_int8(q, scale, block=block)
+
+
+# ---------------- compressed collective (mesh psum wire) ----------------
+def collective_pack(x, scales, block: int = 256, *, interpret=False):
+    """Quantize one device's partial weighted sum against a SHARED per-block
+    scale (pre-pmax'd across the reducing devices) -> int32 psum payload
+    with every value in [-127, 127] (one int8 byte on the wire)."""
+    if _use_pallas() or interpret:
+        from .collective_quant import collective_pack as cp
+
+        if x.shape[-1] % max(block, 1024) == 0:
+            return cp(x, scales, block=block,
+                      interpret=interpret or jax.default_backend() != "tpu")
+    return ref.collective_pack(x, scales, block=block)
+
+
+def collective_unpack(q, scales, block: int = 256, *, interpret=False):
+    """Fused post-psum dequant: int32 summed payload + shared scales -> fp32."""
+    if _use_pallas() or interpret:
+        from .collective_quant import collective_unpack as cu
+
+        if q.shape[-1] % max(block, 1024) == 0:
+            return cu(q, scales, block=block,
+                      interpret=interpret or jax.default_backend() != "tpu")
+    return ref.collective_unpack(q, scales, block=block)

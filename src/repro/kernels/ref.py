@@ -301,6 +301,26 @@ def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, block: int = 256) -> jnp
     return (qf * scale[:, None]).reshape(-1)
 
 
+def collective_pack(x: jnp.ndarray, scales: jnp.ndarray, block: int = 256) -> jnp.ndarray:
+    """Compressed-collective pack oracle: quantize one device's partial sum
+    against a SHARED (pre-pmax'd) per-block scale.  Unlike ``quantize_int8``
+    the scale is an input, not derived from ``x`` — scale choice is a
+    collective decision, so every reducing device rounds against the same
+    grid and the int8-valued payloads sum exactly.  int32 container: the
+    psum accumulator dtype (values fit int8; |q| <= 127)."""
+    xf = x.astype(jnp.float32).reshape(-1, block)
+    sf = scales.astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / sf[:, None]), -127, 127)
+    return q.reshape(-1).astype(jnp.int32)
+
+
+def collective_unpack(q: jnp.ndarray, scales: jnp.ndarray, block: int = 256) -> jnp.ndarray:
+    """Fused post-psum dequant oracle: int32 payload (one device's pack or
+    the psum of many) * shared block scales -> fp32."""
+    qf = q.reshape(-1, block).astype(jnp.float32)
+    return (qf * scales.astype(jnp.float32)[:, None]).reshape(-1)
+
+
 def dequant_reduce(
     q: jnp.ndarray,        # (C, N) int8 wire payload
     scales: jnp.ndarray,   # (C, N/block) fp32 block scales

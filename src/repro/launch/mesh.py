@@ -12,6 +12,10 @@ from __future__ import annotations
 
 import jax
 
+from repro.models.sharding import shard_map_compat  # noqa: F401  (re-export:
+# launch-side drivers build their shard_maps through the same ONE version
+# shim core.rounds uses)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -37,3 +41,18 @@ def mesh_info(mesh) -> dict:
         "axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
         "n_devices": mesh.devices.size,
     }
+
+
+def collective_tiers(mesh, client_axes) -> tuple:
+    """``CostModel.mesh_tiers`` for a concrete mesh: the client axes the
+    round step psums over, outer->inner, with their sizes —
+    ``(("pod", 2), ("data", 16))`` on the multi-pod production mesh.  The
+    one place the cost model's tier layout is derived from a mesh, so byte
+    accounting cannot drift from the mesh actually launched."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    missing = [a for a in client_axes if a not in sizes]
+    if missing:
+        raise ValueError(
+            f"client axes {missing} not on mesh axes {tuple(sizes)}"
+        )
+    return tuple((a, int(sizes[a])) for a in client_axes)

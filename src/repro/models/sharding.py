@@ -17,7 +17,28 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from jax.sharding import PartitionSpec as P
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, axis_names):
+    """shard_map across jax versions — the ONE shim (used by core.rounds'
+    mesh path, launch-side mesh drivers, and the sharded-client-state tests;
+    it used to live inline in core/rounds.py, where every new mesh caller
+    re-derived it).  Manual over ``axis_names`` (the client axes), automatic
+    over every other mesh axis (the model axes) — the top-level API when
+    present, else the jax.experimental fallback, whose ``auto=`` set
+    expresses the same manual/auto split."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as sm
+
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False, auto=auto)
 
 
 @dataclass(frozen=True)
@@ -107,6 +128,67 @@ class ShardRules:
                     continue
             out.append(d)
         return P(*out)
+
+
+def client_state_specs(rules: ShardRules, segments) -> tuple:
+    """PartitionSpecs laying each segment's ``(C, seg.size)`` codec
+    client-state rows out along the mesh (fsdp archs).
+
+    The client dim stays whole (row i is one client's residual — gather/
+    scatter and the sequential scan index it); the *parameter* dim shards
+    over the rules' fsdp axes, so per-device state memory drops by the
+    full fsdp factor and the residual never materializes replicated.
+    Segments whose size the axes do not divide replicate (P(None, None)) —
+    same divisibility contract as ``ShardRules.spec``.  ``segments`` is a
+    ``SegmentMap`` (or any iterable of objects with ``.size``).
+    """
+    ax = rules.fsdp
+    return tuple(
+        rules.spec(None, ax, dim_sizes=(1, seg.size)) for seg in segments
+    )
+
+
+def client_state_shardings(mesh, rules: ShardRules, segments) -> tuple:
+    """``client_state_specs`` bound to a concrete mesh: one NamedSharding
+    per segment, the layout ``CohortState(shardings=...)`` gathers into and
+    ``shard_client_state`` pins an existing state pytree to."""
+    return tuple(
+        NamedSharding(mesh, spec)
+        for spec in client_state_specs(rules, segments)
+    )
+
+
+def shard_client_state(state, mesh, rules: ShardRules, segments=None):
+    """Lay an existing codec client state out along the mesh.
+
+    ``state`` is whatever ``codec.init_client_state`` returned: a flat
+    ``(C, n_params)`` block, or the per-segment tuple of ``(C, seg.size)``
+    blocks (``()`` entries for stateless segments pass through).  Values
+    are unchanged — only placement moves (``jax.device_put`` with the
+    ``client_state_shardings`` layout), so sharded and unsharded rounds
+    stay bitwise-identical.  With ``segments=None`` the flat block is
+    treated as one full-width segment.
+    """
+    class _Flat:
+        def __init__(self, size):
+            self.size = size
+
+    leaves = state if isinstance(state, (tuple, list)) else (state,)
+    if segments is None:
+        # stateless () entries get a placeholder segment; never placed
+        segs = [_Flat(x.shape[1] if hasattr(x, "shape") else 1) for x in leaves]
+    else:
+        segs = list(segments)
+        assert len(segs) == len(leaves), (
+            f"state has {len(leaves)} entries, segment map has {len(segs)}"
+        )
+    specs = client_state_specs(rules, segs)
+    out = tuple(
+        jax.device_put(x, NamedSharding(mesh, spec))
+        if hasattr(x, "shape") else x
+        for x, spec in zip(leaves, specs)
+    )
+    return out if isinstance(state, (tuple, list)) else out[0]
 
 
 def serve_rules(mesh, multi_pod: bool) -> ShardRules:

@@ -1,0 +1,23 @@
+"""wire-accounting collective positive fixture: a class quantizes the psum
+payload but never states collective_bytes — the cost model bills fp32 for
+wire the class compressed."""
+import jax
+
+
+class QuantizedAllReduce:
+    def pack(self, x, scales):
+        return collective_pack(x, scales)
+
+    def reduce(self, wx, axes):
+        q = self.pack(wx, self.scales(wx))
+        for ax in axes:
+            q = jax.lax.psum(q, ax)
+        return q
+    # changes the per-hop wire format, but no collective_bytes: flagged
+
+
+class PlainAllReduce:
+    def reduce(self, wx, axes):          # fp32 psum, nothing encoded:
+        for ax in axes:                  # the billed default — NOT flagged
+            wx = jax.lax.psum(wx, ax)
+        return wx

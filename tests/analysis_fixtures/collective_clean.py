@@ -1,0 +1,26 @@
+"""wire-accounting collective negative fixture: compressed collectives
+that state their per-hop wire size, and psums with nothing encoded."""
+import jax
+
+
+class Int8AllReduce:
+    def reduce(self, wx, axes):
+        q = collective_pack(wx, self.scales(wx))
+        for ax in axes:
+            q = jax.lax.psum(q, ax)
+        return q
+
+    def collective_bytes(self, n):       # per-device per-hop wire restated
+        return n + 4 * (n // 256) + 4
+
+
+class WeightDenominator:
+    def reduce(self, w, axes):           # fp32 sidecar psum, no encode:
+        for ax in axes:                  # billed default — exempt
+            w = jax.lax.psum(w, ax)
+        return w
+
+
+class OfflineEncoder:
+    def encode(self, delta):             # encodes, but nothing crosses a
+        return delta[::2]                # collective here — exempt

@@ -67,9 +67,10 @@ FIRE = {
         ("masked_metrics", "unmasked-sum"),
         ("masked_metrics", "unmasked-max"),
     }),
-    "wire-accounting": (("wire_bad.py",), {
+    "wire-accounting": (("wire_bad.py", "collective_bad.py"), {
         ("EveryOtherCodec", "wire-bytes-not-overridden"),
         ("SparseSegmentCodec", "segment-wire-bytes-not-overridden"),
+        ("QuantizedAllReduce", "collective-bytes-not-stated"),
     }),
 }
 
@@ -79,7 +80,7 @@ SILENT = {
     "recompile-hazard": ("recompile_clean.py",),
     "pallas-vmem-budget": ("vmem_clean.py",),
     "mask-nan-safety": ("mask_clean.py",),
-    "wire-accounting": ("wire_clean.py",),
+    "wire-accounting": ("wire_clean.py", "collective_clean.py"),
 }
 
 

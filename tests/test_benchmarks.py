@@ -19,6 +19,7 @@ import pytest
     "benchmarks.paper_tables",
     "benchmarks.roofline_report",
     "benchmarks.scan_bench",
+    "benchmarks.mesh_bench",
     "benchmarks.compression_bench",
     "benchmarks.population_bench",
     "benchmarks.straggler_bench",
@@ -44,6 +45,7 @@ def test_run_smoke_microbenches(capsys):
     assert any(n.startswith("fl_round_step") for n in names)
     assert any(n.startswith("fedavg_reduce") for n in names)
     assert any(n.startswith("quantize_int8") for n in names)
+    assert any(n.startswith("collective_pack") for n in names)
     assert any(n.startswith("structured_lora_roundtrip") for n in names)
     # --smoke skips the paper tables (minutes of training)
     assert not any(n.startswith("table") for n in names)
